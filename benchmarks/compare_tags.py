@@ -1,0 +1,41 @@
+"""Compare roofline terms between dry-run tags (hillclimb bookkeeping).
+
+    PYTHONPATH=src python -m benchmarks.compare_tags yi-9b train_4k pod \
+        baseline bw1024 bw1024_rdots
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.roofline import ARTIFACTS, analyze_cell
+
+
+def load(arch, shape, mesh, tag):
+    f = ARTIFACTS / f"{arch}__{shape}__{mesh}__{tag}.json"
+    if not f.exists():
+        return None
+    return analyze_cell(json.loads(f.read_text()))
+
+
+def main():
+    arch, shape, mesh = sys.argv[1:4]
+    tags = sys.argv[4:]
+    cols = ("t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+            "roofline_frac", "useful_ratio", "temp_gb_dev", "args_gb_dev")
+    print(f"{'tag':20s}" + "".join(f"{c:>16s}" for c in cols))
+    for tag in tags:
+        a = load(arch, shape, mesh, tag)
+        if a is None or a.get("status") != "ok":
+            print(f"{tag:20s}  missing/{a and a.get('status')}")
+            continue
+        row = f"{tag:20s}"
+        for c in cols:
+            v = a[c]
+            row += f"{v:16.4f}" if isinstance(v, float) else f"{v:>16s}"
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Roofline table driver: reads artifacts/dryrun/*.json (written by
+launch/dryrun.py) and derives the three roofline terms per (arch x shape x
+mesh) cell, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs utilization and
+the roofline fraction.  TPU v5e constants per the assignment:
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import REGISTRY
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+ARTIFACTS = Path(os.environ.get("REPRO_ARTIFACTS", "artifacts")) / "dryrun"
+
+
+_N_CACHE: Dict[str, float] = {}
+
+
+def active_matmul_params(arch: str) -> float:
+    """N for MODEL_FLOPS=6ND: parameters touched by matmuls per token —
+    derived from the REAL param descriptor tree (not an analytic formula).
+    Expert tensors count at the top_k/E activation fraction; the input
+    embedding gather is excluded; a tied embedding still counts once as the
+    LM head."""
+    if arch in _N_CACHE:
+        return _N_CACHE[arch]
+    import numpy as _np
+    from repro.models.common import AxisRules, is_pd
+    from repro.models.model import build_model
+    import jax as _jax
+
+    cfg = REGISTRY[arch]
+    model = build_model(cfg, AxisRules(None))
+    pds = model.pds()
+    total = 0.0
+    moe = cfg.moe
+    for pd in _jax.tree_util.tree_leaves(pds, is_leaf=is_pd):
+        n = float(_np.prod(pd.shape))
+        if "expert" in pd.axes:
+            n *= moe.top_k / moe.num_experts
+        total += n
+    emb = cfg.padded_vocab * cfg.d_model
+    total -= emb if not cfg.tie_embeddings else 0.0  # input-embed gather
+    _N_CACHE[arch] = total
+    return total
+
+
+def model_flops(arch: str, shape_kind: str, seq: int, batch: int) -> float:
+    """6ND (train) / 2ND (inference)."""
+    n = active_matmul_params(arch)
+    if shape_kind == "train":
+        return 6.0 * n * batch * seq
+    if shape_kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch                    # decode: one token per seq
+
+
+SHAPE_DIMS = {
+    "train_4k": (4096, 256), "prefill_32k": (32768, 32),
+    "decode_32k": (32768, 128), "long_500k": (524288, 1),
+}
+
+
+def load_cells(tag: str = "baseline", art_dir: Optional[Path] = None
+               ) -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(str((art_dir or ARTIFACTS) / f"*__{tag}.json"))):
+        rows.append(json.loads(Path(f).read_text()))
+    return rows
+
+
+def analyze_cell(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "status": rec["status"],
+                "reason": rec.get("reason", rec.get("error", ""))[:80]}
+    hc = rec["hlo_corrected"]
+    n_chips = rec["n_chips"]
+    t_c = hc["flops"] / PEAK
+    t_m = hc["bytes"] / HBM
+    # link traffic: ring all-reduce moves ~2x its payload per device; AG/RS/
+    # A2A move ~1x.  Fall back to raw collective_bytes if no breakdown.
+    link_bytes = 0.0
+    for k, v in hc.items():
+        if k.startswith("coll_"):
+            link_bytes += (2.0 if "all-reduce" in k else 1.0) * v
+    if link_bytes == 0.0:
+        link_bytes = hc["collective_bytes"]
+    t_x = link_bytes / ICI
+    dom = max([(t_c, "compute"), (t_m, "memory"), (t_x, "collective")])[1]
+    seq, batch = SHAPE_DIMS[rec["shape"]]
+    kind = rec["meta"]["kind"]
+    mf = model_flops(rec["arch"], kind, seq, batch)
+    hlo_global = hc["flops"] * n_chips
+    t_model = mf / (n_chips * PEAK)
+    frac = t_model / max(t_c, t_m, t_x, 1e-30)
+    args_gb = rec["memory_analysis"]["argument_bytes"] / 1e9
+    temp_gb = rec["memory_analysis"]["temp_bytes"] / 1e9
+    # decode cells are intrinsically memory-bound: the honest efficiency
+    # metric is useful-bytes (params + KV/state read once) / HLO bytes.
+    bytes_eff = None
+    if kind == "decode":
+        cfg = REGISTRY[rec["arch"]]
+        min_bytes = 2.0 * cfg.param_count() + rec["meta"].get(
+            "cache_bytes_global", 0)
+        bytes_eff = min_bytes / max(hc["bytes"] * n_chips, 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": "ok", "step": rec["step"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "bottleneck": dom,
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / max(hlo_global, 1e-30),
+        "roofline_frac": frac,
+        "bytes_eff": bytes_eff,
+        "args_gb_dev": args_gb, "temp_gb_dev": temp_gb,
+        "compile_s": rec.get("compile_s", 0.0),
+    }
+
+
+def run(tag: str = "baseline") -> List[str]:
+    lines = []
+    cells = load_cells(tag)
+    if not cells:
+        return [f"roofline_{tag},0,NO_ARTIFACTS (run launch/dryrun.py first)"]
+    ok = skipped = 0
+    worst = None
+    for rec in cells:
+        a = analyze_cell(rec)
+        if a is None:
+            continue
+        if a["status"] != "ok":
+            skipped += 1
+            lines.append(f"roofline_{a['arch']}__{a['shape']}__{a['mesh']},0,"
+                         f"status={a['status']}")
+            continue
+        ok += 1
+        extra = (f";bytes_eff={a['bytes_eff']:.3f}"
+                 if a.get("bytes_eff") is not None else "")
+        lines.append(
+            f"roofline_{a['arch']}__{a['shape']}__{a['mesh']},"
+            f"{max(a['t_compute_s'], a['t_memory_s'], a['t_collective_s']) * 1e6:.0f},"
+            f"bottleneck={a['bottleneck']};frac={a['roofline_frac']:.3f};"
+            f"useful={a['useful_ratio']:.2f};tc={a['t_compute_s']:.4f};"
+            f"tm={a['t_memory_s']:.4f};tx={a['t_collective_s']:.4f}" + extra)
+        if a["mesh"] == "pod" and (worst is None
+                                   or a["roofline_frac"] < worst[1]):
+            worst = (f"{a['arch']}__{a['shape']}", a["roofline_frac"])
+    lines.append(f"roofline_summary_{tag},0,ok={ok};skipped={skipped};"
+                 f"worst={worst[0] if worst else 'n/a'}"
+                 f"({worst[1]:.4f})" if worst else f"roofline_summary,0,ok={ok}")
+    return lines
+
+
+if __name__ == "__main__":
+    for l in run():
+        print(l)

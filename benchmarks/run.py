@@ -1,0 +1,41 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines:
+- fig2_*      operator-accuracy CDFs (Frontier RF vs Vidur proxy)  [Fig. 2]
+- table2_*    end-to-end predicted vs measured throughput          [Table 2]
+- table1_*    feature-matrix cells exercised as real simulations   [Table 1]
+- sim_scale_* simulator events/s + speedup vs simulated time
+- roofline_*  40-cell dry-run roofline terms (reads artifacts/dryrun)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    sections = []
+    from benchmarks import (bench_operator_accuracy, bench_e2e_accuracy,
+                            bench_sim_scale, roofline)
+    sections = [
+        ("operator_accuracy", bench_operator_accuracy.run),
+        ("e2e_accuracy", bench_e2e_accuracy.run),
+        ("sim_scale", bench_sim_scale.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in sections:
+        try:
+            for line in fn():
+                print(line)
+        except Exception as e:  # report and continue; fail at the end
+            traceback.print_exc()
+            failed.append((name, repr(e)))
+    if failed:
+        print(f"bench_failures,0,{failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

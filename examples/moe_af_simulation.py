@@ -1,0 +1,44 @@
+"""MoE + AF disaggregation study (MegaScale-Infer / Step-3 style).
+
+Sweeps the attention:FFN device ratio and micro-batch count for
+mixtral-8x7b decode under skewed (Zipf) expert routing, reporting the
+pipeline critical path, bubbles, and the MoE straggler penalty — the three
+phenomena Frontier's event-graph + micro-workflow models capture.
+
+    PYTHONPATH=src python examples/moe_af_simulation.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import A800_SXM4_80G, ParallelismConfig
+from repro.core.opmodels.analytical import OperatorModelSet
+from repro.core.routing import BalancedRouting, ZipfRouting
+from repro.core.workflows.af_disagg import simulate_af_decode_step
+
+
+def main():
+    cfg = get_config("mixtral-8x7b")
+    hw = A800_SXM4_80G
+    ops = OperatorModelSet(hw)
+    lens = [2048] * 256          # decode batch: 256 seqs @ 2k context
+
+    print(f"{'attn:ffn':>9s} {'m':>3s} {'routing':>9s} {'step(ms)':>9s} "
+          f"{'attn idle':>9s} {'ffn idle':>9s}")
+    for n_attn, n_ffn in ((2, 6), (4, 4), (6, 2)):
+        for m in (1, 2, 4):
+            for rname, router in (("balanced", BalancedRouting()),
+                                  ("zipf1.2", ZipfRouting(1.2))):
+                st = simulate_af_decode_step(
+                    cfg, hw, ops, lens, m=m,
+                    attn_par=ParallelismConfig(tp=n_attn),
+                    ffn_par=ParallelismConfig(tp=1, ep=n_ffn),
+                    routing=router, rng=np.random.default_rng(0))
+                print(f"{n_attn}:{n_ffn:>7} {m:3d} {rname:>9s} "
+                      f"{st.makespan*1e3:9.2f} {st.attn_bubble_frac:9.1%} "
+                      f"{st.ffn_bubble_frac:9.1%}")
+    print("\nReading: ffn-heavy ratios waste attention GPUs (idle%); "
+          "zipf routing inflates the FFN stage via the straggler max().")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Design-space exploration: throughput/interactivity Pareto frontier.
+
+The motivating use-case of the paper — finding the optimal serving config
+without burning 18,000 GPU-hours.  Sweeps (topology x parallelism x
+batching policy) for qwen2-7b on a 16-GPU budget and prints the frontier.
+
+    PYTHONPATH=src python examples/pareto_sweep.py
+"""
+from repro.configs import get_config
+from repro.core import A800_SXM4_80G, ParallelismConfig, pareto_frontier
+from repro.core.policies.batching import ChunkedPrefill, ContinuousBatching
+from repro.core.workflows.colocated import build_colocated
+from repro.core.workflows.pd_disagg import build_pd
+from repro.workload.generator import WorkloadConfig, generate
+
+
+def main():
+    cfg = get_config("qwen2-7b")
+    hw = A800_SXM4_80G
+    wl = WorkloadConfig(n_requests=150, rate=25.0, prompt_mean=1024,
+                        output_mean=128, seed=0)
+    budget = 16
+    candidates = []
+
+    for tp in (1, 2, 4):
+        n = budget // tp
+        candidates.append((f"colo x{n} tp{tp} cont",
+                           lambda tp=tp, n=n: build_colocated(
+                               cfg, hw, n_replicas=n,
+                               par=ParallelismConfig(tp=tp),
+                               policy=ContinuousBatching())))
+        candidates.append((f"colo x{n} tp{tp} chunked",
+                           lambda tp=tp, n=n: build_colocated(
+                               cfg, hw, n_replicas=n,
+                               par=ParallelismConfig(tp=tp),
+                               policy=ChunkedPrefill(chunk=512))))
+    for n_p in (4, 8, 12):
+        n_d = budget - n_p
+        candidates.append((f"pd {n_p}P:{n_d}D",
+                           lambda n_p=n_p, n_d=n_d: build_pd(
+                               cfg, hw, n_prefill=n_p, n_decode=n_d)))
+
+    points = []
+    print(f"{'config':24s} {'tok/s/dev':>10s} {'tpot_p50(ms)':>13s} "
+          f"{'ttft_p99(ms)':>13s}")
+    for name, builder in candidates:
+        rep = builder().run(generate(wl))
+        thr = rep["throughput_tok_s_per_device"]
+        inter = 1.0 / max(rep["tpot_p50_s"], 1e-9)
+        points.append(((thr, inter), name, rep))
+        print(f"{name:24s} {thr:10.1f} {rep['tpot_p50_s']*1e3:13.2f} "
+              f"{rep['ttft_p99_s']*1e3:13.1f}")
+
+    front = pareto_frontier([p for p, _, _ in points])
+    names = [n for (p, n, _) in points if p in front]
+    print("\nPareto frontier (throughput x interactivity):")
+    for n in names:
+        print("  *", n)
+
+
+if __name__ == "__main__":
+    main()

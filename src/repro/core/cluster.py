@@ -1,0 +1,197 @@
+"""ClusterWorker / ClusterScheduler / ReplicaWorker.
+
+A ClusterWorker is the abstraction for one specialized hardware pool (a
+prefill cluster, a decode cluster, a colocated pool, an attention or FFN
+cluster).  Its ClusterScheduler routes requests to ReplicaWorkers and
+participates in inter-stage coordination (memory-availability signaling for
+PD backpressure).  A ReplicaWorker simulates one model instance: it forms
+batches with a pluggable BatchingPolicy, prices them with the
+ExecutionPredictor, and advances request state on BATCH_DONE events.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.engine import SimEngine
+from repro.core.events import EV, Event
+from repro.core.policies.batching import BatchingPolicy, BatchPlan
+from repro.core.policies.memory import PagedKVManager
+from repro.core.policies.scheduling import FCFS, QueuePolicy
+from repro.core.predictor import ExecutionPredictor
+from repro.core.request import Request, RState
+
+
+@dataclass
+class Hooks:
+    """Controller callbacks (inter-stage coordination points)."""
+    prefill_complete: Callable = lambda r, replica: None
+    token_generated: Callable = lambda r, replica, t: None
+    request_complete: Callable = lambda r, replica: None
+    memory_available: Callable = lambda cluster, replica: None
+
+
+class ReplicaWorker:
+    def __init__(self, engine: SimEngine, name: str,
+                 predictor: ExecutionPredictor, policy: BatchingPolicy,
+                 memory: Optional[PagedKVManager], hooks: Hooks, *,
+                 role: str = "colocated", queue_policy: Optional[QueuePolicy] = None,
+                 slowdown: float = 1.0):
+        self.engine = engine
+        self.name = name
+        self.predictor = predictor
+        self.policy = policy
+        self.memory = memory
+        self.hooks = hooks
+        self.role = role
+        self.queue_policy = queue_policy or FCFS()
+        self.slowdown = slowdown          # straggler factor (1.0 = healthy)
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []  # decoding requests resident here
+        self.busy = False
+        self.failed = False
+        self.cluster: Optional["ClusterWorker"] = None
+        self.stats = {"batches": 0, "busy_time": 0.0, "tokens": 0,
+                      "prefill_tokens": 0}
+
+    # ------------------------------------------------------------- intake --
+    def enqueue_prefill(self, r: Request) -> None:
+        self.waiting.append(r)
+        self.kick()
+
+    def start_decode(self, r: Request) -> None:
+        if r.state != RState.QUEUED_DECODE:
+            r.to(RState.QUEUED_DECODE, self.engine.now)
+        self.running.append(r)
+        self.kick()
+
+    def kick(self) -> None:
+        self.engine.after(0.0, EV.SCHEDULE_TICK, lambda ev: self._schedule())
+
+    # ---------------------------------------------------------- scheduling --
+    def _schedule(self) -> None:
+        if self.busy or self.failed:
+            return
+        ordered = self.queue_policy.order(self.waiting, self.engine.now)
+        plan = self.policy.plan(ordered, self.running, self.memory,
+                                self.engine.now)
+        if plan.empty:
+            return
+        self.busy = True
+        bd = self.predictor.step_time(plan.q_lens, plan.kv_lens,
+                                      decode=(not plan.prefill))
+        t = bd.total * self.slowdown
+        self.stats["batches"] += 1
+        self.stats["busy_time"] += t
+        for r, _ in plan.prefill:
+            if r.state == RState.QUEUED_PREFILL:
+                r.to(RState.PREFILL_RUNNING, self.engine.now)
+        for r in plan.decode:
+            if r.state == RState.QUEUED_DECODE:
+                r.to(RState.DECODING, self.engine.now)
+        self.engine.after(t, EV.BATCH_DONE,
+                          lambda ev: self._batch_done(plan),
+                          replica=self.name, dur=t,
+                          n_prefill=len(plan.prefill), n_decode=len(plan.decode))
+
+    def _batch_done(self, plan: BatchPlan) -> None:
+        now = self.engine.now
+        self.busy = False
+        freed = False
+        for r, chunk in plan.prefill:
+            r.prefill_progress += chunk
+            self.stats["prefill_tokens"] += chunk
+            if r.prefill_progress >= r.prompt_len:
+                self.waiting.remove(r)
+                r.to(RState.PREFILL_COMPLETE, now)
+                # prefill emits the first token
+                r.generated += 1
+                self.stats["tokens"] += 1
+                if r.first_token_time is None:
+                    r.first_token_time = now
+                self.hooks.token_generated(r, self, now)
+                if self.role == "colocated":
+                    if self.memory is not None:
+                        self.memory.grow(r.rid, r.context_len)
+                    r.to(RState.QUEUED_DECODE, now)
+                    self.running.append(r)
+                else:
+                    self.hooks.prefill_complete(r, self)
+            else:
+                r.to(RState.QUEUED_PREFILL, now)  # chunked: back to queue
+        for r in plan.decode:
+            r.generated += 1
+            self.stats["tokens"] += 1
+            if self.memory is not None:
+                self.memory.grow(r.rid, r.context_len)
+            self.hooks.token_generated(r, self, now)
+            if r.done:
+                self.running.remove(r)
+                r.to(RState.COMPLETE, now)
+                r.finish_time = now
+                if self.memory is not None:
+                    self.memory.free(r.rid)
+                    freed = True
+                self.hooks.request_complete(r, self)
+        if freed:
+            self.hooks.memory_available(self.cluster, self)
+        self.kick()
+
+    # ------------------------------------------------------------ failures --
+    def fail(self, downtime: float) -> List[Request]:
+        """Replica failure: running work is lost and must be re-routed."""
+        self.failed = True
+        lost = self.waiting + self.running
+        self.waiting, self.running = [], []
+        if self.memory is not None:
+            for r in lost:
+                self.memory.free(r.rid)
+        self.engine.after(downtime, EV.REPLICA_RECOVERED,
+                          lambda ev: self._recover(), replica=self.name)
+        return lost
+
+    def _recover(self) -> None:
+        self.failed = False
+        self.kick()
+
+    # -------------------------------------------------------------- state --
+    def load(self) -> float:
+        mem = self.memory.utilization if self.memory is not None else 0.0
+        return len(self.waiting) + len(self.running) + mem
+
+
+class ClusterWorker:
+    """A pool of replicas with a cluster-level scheduler."""
+
+    def __init__(self, name: str, role: str, replicas: List[ReplicaWorker]):
+        self.name = name
+        self.role = role
+        self.replicas = replicas
+        for r in replicas:
+            r.cluster = self
+
+    # -- ClusterScheduler duties -------------------------------------------
+    def route(self, r: Request) -> ReplicaWorker:
+        healthy = [w for w in self.replicas if not w.failed]
+        if not healthy:
+            raise RuntimeError(f"cluster {self.name}: no healthy replicas")
+        w = min(healthy, key=lambda w: (w.load(), w.name))
+        return w
+
+    def replica_with_memory(self, tokens: int) -> Optional[ReplicaWorker]:
+        """For pull-based KV transfer: who can host this request's KV?"""
+        best, best_load = None, None
+        for w in self.replicas:
+            if w.failed or w.memory is None:
+                continue
+            if w.memory.can_admit(tokens):
+                l = w.load()
+                if best is None or l < best_load:
+                    best, best_load = w, l
+        return best
+
+    def utilization(self, now: float) -> float:
+        if not self.replicas or now <= 0:
+            return 0.0
+        return sum(w.stats["busy_time"] for w in self.replicas) / (
+            now * len(self.replicas))

@@ -1,0 +1,140 @@
+"""GlobalController: the stateful orchestrator of inter-stage workflows.
+
+Implements the paper's §3.3 PD-disaggregation workflow verbatim:
+(1) prefill stage as producer — requests routed to the prefill cluster,
+    PREFILL_COMPLETE transitions tracked, KV held in the prefill buffer;
+(2) decode stage as consumer with finite KV memory — its ClusterScheduler
+    signals MEMORY_AVAILABLE on evictions;
+(3) the controller respects backpressure: it keeps a PREFILL_COMPLETE queue
+    and initiates KV_CACHE_TRANSFER only when a decode replica has space.
+Colocated mode degenerates to routing + tracking.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.cluster import ClusterWorker, Hooks, ReplicaWorker
+from repro.core.engine import SimEngine
+from repro.core.events import EV
+from repro.core.metrics import MetricsCollector
+from repro.core.request import Request, RState
+
+
+class GlobalController:
+    def __init__(self, engine: SimEngine, *,
+                 mode: str = "colocated",
+                 clusters: Dict[str, ClusterWorker],
+                 kv_bytes_per_token: float = 0.0,
+                 transfer_bw: float = 25e9,
+                 metrics: Optional[MetricsCollector] = None):
+        self.engine = engine
+        self.mode = mode
+        self.clusters = clusters
+        self.kv_bytes_per_token = kv_bytes_per_token
+        self.transfer_bw = transfer_bw
+        self.metrics = metrics or MetricsCollector()
+        self.pending_transfer: List[Request] = []   # PREFILL_COMPLETE queue
+        self.prefill_home: Dict[int, ReplicaWorker] = {}
+        self.requests: Dict[int, Request] = {}
+        self._transfers_in_flight = 0
+
+    # ------------------------------------------------------------- wiring --
+    def hooks(self) -> Hooks:
+        return Hooks(
+            prefill_complete=self.on_prefill_complete,
+            token_generated=self.metrics.on_token,
+            request_complete=self.on_request_complete,
+            memory_available=self.on_memory_available,
+        )
+
+    # ------------------------------------------------------------ arrivals --
+    def submit_all(self, requests: List[Request]) -> None:
+        for r in requests:
+            self.requests[r.rid] = r
+            self.engine.at(r.arrival, EV.REQUEST_ARRIVAL,
+                           lambda ev, r=r: self._arrive(r), rid=r.rid)
+
+    def _arrive(self, r: Request) -> None:
+        cluster = self.clusters["prefill" if self.mode == "pd" else "colocated"]
+        replica = cluster.route(r)
+        replica.enqueue_prefill(r)
+
+    # -------------------------------------------------- PD stage handoffs --
+    def on_prefill_complete(self, r: Request, replica: ReplicaWorker) -> None:
+        if self.mode != "pd":
+            return
+        # KV stays in the prefill replica's buffer until transferred.
+        self.prefill_home[r.rid] = replica
+        self.pending_transfer.append(r)
+        self._try_transfers()
+
+    def on_memory_available(self, cluster: Optional[ClusterWorker],
+                            replica: ReplicaWorker) -> None:
+        if self.mode == "pd" and cluster is not None and cluster.role == "decode":
+            self._try_transfers()
+
+    def _try_transfers(self) -> None:
+        """Initiate KV transfers for as many queued requests as decode
+        memory allows (system-level backpressure)."""
+        if self.mode != "pd":
+            return
+        decode = self.clusters["decode"]
+        remaining: List[Request] = []
+        for r in self.pending_transfer:
+            target = decode.replica_with_memory(r.context_len)
+            if target is None:
+                remaining.append(r)        # backpressured
+                continue
+            assert target.memory.admit(r.rid, r.context_len)
+            r.to(RState.KV_TRANSFER, self.engine.now)
+            nbytes = self.kv_bytes_per_token * r.prompt_len
+            dt = nbytes / self.transfer_bw if self.transfer_bw else 0.0
+            self._transfers_in_flight += 1
+            self.engine.after(
+                dt, EV.KV_TRANSFER_DONE,
+                lambda ev, r=r, tgt=target: self._transfer_done(r, tgt),
+                rid=r.rid, bytes=nbytes)
+        self.pending_transfer = remaining
+
+    def _transfer_done(self, r: Request, target: ReplicaWorker) -> None:
+        self._transfers_in_flight -= 1
+        src = self.prefill_home.pop(r.rid, None)
+        if src is not None and src.memory is not None:
+            src.memory.free(r.rid)
+            src.kick()                      # prefill can admit more work
+        target.start_decode(r)
+
+    # ------------------------------------------------------------- endings --
+    def on_request_complete(self, r: Request, replica: ReplicaWorker) -> None:
+        self.metrics.on_complete(r, replica)
+
+    # ------------------------------------------------------------ failures --
+    def inject_failure(self, cluster_name: str, replica_idx: int,
+                       at: float, downtime: float) -> None:
+        cluster = self.clusters[cluster_name]
+        replica = cluster.replicas[replica_idx]
+
+        def do_fail(ev):
+            lost = replica.fail(downtime)
+            # re-route lost work to healthy replicas (restart from scratch:
+            # conservative fault model — KV is gone)
+            for r in lost:
+                if r.state in (RState.QUEUED_PREFILL, RState.PREFILL_RUNNING):
+                    r.state = RState.QUEUED_PREFILL
+                    cluster.route(r).enqueue_prefill(r)
+                elif r.state in (RState.DECODING, RState.QUEUED_DECODE):
+                    r.state = RState.QUEUED_PREFILL
+                    r.prefill_progress = 0
+                    r.generated = 0
+                    self._arrive(r)
+        self.engine.at(at, EV.REPLICA_FAILURE, do_fail,
+                       cluster=cluster_name, replica=replica_idx)
+
+    # ------------------------------------------------------------- invariant --
+    def conservation_check(self) -> Dict[str, int]:
+        """Every submitted request is exactly in one place (property test)."""
+        states = {}
+        for r in self.requests.values():
+            states[r.state.value] = states.get(r.state.value, 0) + 1
+        return states

@@ -1,0 +1,59 @@
+"""Deterministic discrete-event simulation engine.
+
+Events are ordered by (time, seq) — seq is a global monotone counter so
+simultaneous events replay in schedule order, making every simulation
+bit-reproducible (property-tested).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Callable, List, Optional
+
+from repro.core.events import EV, Event
+
+
+class SimEngine:
+    def __init__(self, *, trace: Optional[Callable[[Event], None]] = None,
+                 max_events: int = 50_000_000):
+        self.now = 0.0
+        self._heap: List[Event] = []
+        self._trace = trace
+        self._processed = 0
+        self._max_events = max_events
+
+    # ------------------------------------------------------------------ API
+    def at(self, time: float, kind: EV, fn: Callable[[Event], None],
+           **data) -> Event:
+        assert time >= self.now - 1e-12, (time, self.now)
+        ev = Event(time=max(time, self.now), kind=kind, fn=fn, data=data)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def after(self, delay: float, kind: EV, fn: Callable[[Event], None],
+              **data) -> Event:
+        return self.at(self.now + max(delay, 0.0), kind, fn, **data)
+
+    def run(self, until: float = float("inf")) -> None:
+        while self._heap:
+            ev = self._heap[0]
+            if ev.time > until:
+                break
+            heapq.heappop(self._heap)
+            self.now = ev.time
+            self._processed += 1
+            if self._processed > self._max_events:
+                raise RuntimeError("simulation event budget exceeded")
+            if self._trace is not None:
+                self._trace(ev)
+            if ev.fn is not None:
+                ev.fn(ev)
+        if self._heap and self._heap[0].time > until:
+            self.now = until
+
+    @property
+    def pending(self) -> int:
+        return len(self._heap)
+
+    @property
+    def processed(self) -> int:
+        return self._processed

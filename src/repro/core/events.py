@@ -1,0 +1,52 @@
+"""Event definitions for the stage-centric simulation.
+
+Events are the *native primitives* of Frontier's abstraction: requests flow
+through a distributed system as a graph of timed events (arrival, batch
+execution, KV transfer, memory signals, micro-batch pipeline stages), not as
+monolithic replica-level steps.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+
+class EV(enum.Enum):
+    # request lifecycle
+    REQUEST_ARRIVAL = "request_arrival"
+    PREFILL_ENQUEUE = "prefill_enqueue"
+    PREFILL_COMPLETE = "prefill_complete"
+    KV_TRANSFER_START = "kv_transfer_start"
+    KV_TRANSFER_DONE = "kv_transfer_done"
+    DECODE_ENQUEUE = "decode_enqueue"
+    TOKEN_GENERATED = "token_generated"
+    REQUEST_COMPLETE = "request_complete"
+    # cluster-level
+    BATCH_START = "batch_start"
+    BATCH_DONE = "batch_done"
+    MEMORY_AVAILABLE = "memory_available"
+    SCHEDULE_TICK = "schedule_tick"
+    REPLICA_FAILURE = "replica_failure"
+    REPLICA_RECOVERED = "replica_recovered"
+    # AF-disaggregation micro-pipeline
+    ATTN_COMPUTE_DONE = "attn_compute_done"
+    A2F_TRANSFER_DONE = "a2f_transfer_done"
+    FFN_COMPUTE_DONE = "ffn_compute_done"
+    F2A_TRANSFER_DONE = "f2a_transfer_done"
+
+
+_seq = itertools.count()
+
+
+@dataclass(order=True)
+class Event:
+    time: float
+    seq: int = field(default_factory=lambda: next(_seq))
+    kind: EV = field(compare=False, default=EV.SCHEDULE_TICK)
+    fn: Optional[Callable[["Event"], None]] = field(compare=False, default=None)
+    data: Dict[str, Any] = field(compare=False, default_factory=dict)
+
+    def __repr__(self) -> str:  # compact trace line
+        return f"Event(t={self.time:.6f}, {self.kind.value}, {self.data})"

@@ -1,0 +1,66 @@
+"""Serving metrics: TTFT / TPOT / throughput / goodput / Pareto frontier."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.request import Request
+
+
+def _pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+@dataclass
+class MetricsCollector:
+    completed: List[Request] = field(default_factory=list)
+    token_times: List[float] = field(default_factory=list)
+    start: float = 0.0
+    end: float = 0.0
+
+    def on_token(self, r: Request, replica, t: float) -> None:
+        self.token_times.append(t)
+        self.end = max(self.end, t)
+
+    def on_complete(self, r: Request, replica) -> None:
+        self.completed.append(r)
+        self.end = max(self.end, r.finish_time or 0.0)
+
+    # ------------------------------------------------------------- report --
+    def report(self, *, n_devices: int = 1,
+               slo_ttft: Optional[float] = None,
+               slo_tpot: Optional[float] = None) -> Dict[str, float]:
+        dur = max(self.end - self.start, 1e-9)
+        ttfts = [r.ttft() for r in self.completed if r.ttft() is not None]
+        tpots = [r.tpot() for r in self.completed if r.tpot() is not None]
+        out_tokens = sum(r.generated for r in self.completed)
+        rep = {
+            "n_completed": len(self.completed),
+            "duration_s": dur,
+            "throughput_tok_s": out_tokens / dur,
+            "throughput_tok_s_per_device": out_tokens / dur / max(n_devices, 1),
+            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else float("nan"),
+            "ttft_p50_s": _pct(ttfts, 50), "ttft_p99_s": _pct(ttfts, 99),
+            "tpot_mean_s": float(np.mean(tpots)) if tpots else float("nan"),
+            "tpot_p50_s": _pct(tpots, 50), "tpot_p99_s": _pct(tpots, 99),
+        }
+        if slo_ttft is not None and slo_tpot is not None and self.completed:
+            good = [r for r in self.completed
+                    if (r.ttft() or 9e9) <= slo_ttft
+                    and (r.tpot() or 9e9) <= slo_tpot]
+            rep["goodput_tok_s"] = sum(r.generated for r in good) / dur
+            rep["slo_attainment"] = len(good) / len(self.completed)
+        return rep
+
+
+def pareto_frontier(points: Sequence[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    """(throughput, interactivity=1/tpot) maximization frontier."""
+    pts = sorted(points, key=lambda p: (-p[0], -p[1]))
+    front, best = [], -np.inf
+    for x, y in pts:
+        if y > best:
+            front.append((x, y))
+            best = y
+    return front

@@ -1,0 +1,5 @@
+from repro.core.opmodels.analytical import OperatorModelSet, AnalyticalModels  # noqa: F401
+from repro.core.opmodels.forest import RandomForest  # noqa: F401
+from repro.core.opmodels.kernelsim import VirtualKernels  # noqa: F401
+from repro.core.opmodels.vidur_proxy import VidurProxyModel  # noqa: F401
+from repro.core.opmodels.refined import RefinedModels, calibrate_refined  # noqa: F401

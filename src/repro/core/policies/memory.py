@@ -1,0 +1,80 @@
+"""KV-cache memory management policies (PagedAttention-style block manager).
+
+The decode cluster's ClusterScheduler tracks memory through one of these
+managers; `free` events trigger MEMORY_AVAILABLE signals to the
+GlobalController — the backpressure mechanism of PD disaggregation.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict
+
+
+class PagedKVManager:
+    """vLLM-style paged allocator: fixed-size token blocks per request."""
+
+    def __init__(self, total_bytes: float, kv_bytes_per_token: float, *,
+                 block_tokens: int = 16, watermark: float = 0.02):
+        self.block_tokens = block_tokens
+        self.block_bytes = kv_bytes_per_token * block_tokens
+        self.total_blocks = int(total_bytes // max(self.block_bytes, 1))
+        self.free_blocks = self.total_blocks
+        self.watermark_blocks = int(self.total_blocks * watermark)
+        self._held: Dict[int, int] = {}   # rid -> blocks
+
+    def blocks_for(self, tokens: int) -> int:
+        return max(1, math.ceil(tokens / self.block_tokens))
+
+    def can_admit(self, tokens: int) -> bool:
+        return (self.free_blocks - self.blocks_for(tokens)
+                >= self.watermark_blocks)
+
+    def admit(self, rid: int, tokens: int) -> bool:
+        need = self.blocks_for(tokens)
+        if self.free_blocks - need < self.watermark_blocks:
+            return False
+        self.free_blocks -= need
+        self._held[rid] = need
+        return True
+
+    def grow(self, rid: int, new_tokens: int) -> bool:
+        """Ensure rid holds enough blocks for new total token count."""
+        need = self.blocks_for(new_tokens)
+        have = self._held.get(rid, 0)
+        if need <= have:
+            return True
+        extra = need - have
+        if self.free_blocks < extra:
+            return False
+        self.free_blocks -= extra
+        self._held[rid] = need
+        return True
+
+    def free(self, rid: int) -> int:
+        blocks = self._held.pop(rid, 0)
+        self.free_blocks += blocks
+        assert self.free_blocks <= self.total_blocks
+        return blocks
+
+    @property
+    def utilization(self) -> float:
+        if self.total_blocks == 0:
+            return 1.0
+        return 1.0 - self.free_blocks / self.total_blocks
+
+    def held_blocks(self) -> int:
+        return sum(self._held.values())
+
+
+class MonolithicKVManager(PagedKVManager):
+    """Contiguous per-request allocation at max length (TensorRT-LLM v1
+    style static memory): admits reserve output_len upfront."""
+
+    def __init__(self, total_bytes: float, kv_bytes_per_token: float,
+                 max_len: int, **kw):
+        super().__init__(total_bytes, kv_bytes_per_token, block_tokens=1, **kw)
+        self.max_len = max_len
+
+    def blocks_for(self, tokens: int) -> int:  # always reserve max_len
+        return self.max_len

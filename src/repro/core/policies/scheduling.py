@@ -1,0 +1,40 @@
+"""Queue-ordering policies for ClusterSchedulers."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.request import Request
+
+
+class QueuePolicy:
+    name = "base"
+
+    def order(self, queue: List[Request], now: float) -> List[Request]:
+        raise NotImplementedError
+
+
+class FCFS(QueuePolicy):
+    name = "fcfs"
+
+    def order(self, queue, now):
+        return sorted(queue, key=lambda r: (r.arrival, r.rid))
+
+
+class SJF(QueuePolicy):
+    """Shortest prompt first (reduces head-of-line blocking for prefill)."""
+    name = "sjf"
+
+    def order(self, queue, now):
+        return sorted(queue, key=lambda r: (r.prompt_len, r.arrival, r.rid))
+
+
+class Priority(QueuePolicy):
+    """External priority in request.timestamps['priority'] (lower first)."""
+    name = "priority"
+
+    def order(self, queue, now):
+        return sorted(queue, key=lambda r: (r.timestamps.get("priority", 0.0),
+                                            r.arrival, r.rid))
+
+
+POLICIES = {p.name: p for p in (FCFS(), SJF(), Priority())}

@@ -1,0 +1,207 @@
+"""ExecutionPredictor: decomposes a model step into a data-dependent
+micro-workflow of operator events and predicts its runtime.
+
+Key paper features implemented here:
+- per-operator decomposition (qkv/attn/wo/ffn/gate/collectives) instead of a
+  monolithic batch model;
+- the MoE micro-workflow: gate GEMM -> pluggable routing module ->
+  token-to-expert assignment map -> heterogeneous per-expert GroupedGEMM
+  tasks per EP rank -> implicit synchronization barrier modeled as
+  max[T_rank_1..T_rank_ep] (straggler effect);
+- TP collectives (2 all-reduces per layer), EP all-to-alls, PP micro-batch
+  pipelining at the replica level.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import (
+    ATTN_GLOBAL, ATTN_LOCAL, RECURRENT, RWKV, ModelConfig,
+)
+from repro.core.hardware import HardwareSpec, ParallelismConfig
+from repro.core.opmodels.analytical import OperatorModelSet
+from repro.core.routing import BalancedRouting, RoutingModule, split_by_rank
+
+
+@dataclass
+class StepBreakdown:
+    total: float = 0.0
+    parts: Dict[str, float] = field(default_factory=dict)
+    moe_straggler_excess: float = 0.0   # time lost to the max() barrier
+    dropped_token_frac: float = 0.0
+
+    def add(self, name: str, t: float) -> None:
+        self.parts[name] = self.parts.get(name, 0.0) + t
+        self.total += t
+
+
+class ExecutionPredictor:
+    def __init__(self, cfg: ModelConfig, par: ParallelismConfig,
+                 hw: HardwareSpec, ops: OperatorModelSet, *,
+                 routing: Optional[RoutingModule] = None,
+                 engine_overhead: float = 2e-3,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.par = par
+        self.hw = hw
+        self.ops = ops
+        self.routing = routing or BalancedRouting()
+        self.engine_overhead = engine_overhead
+        self.rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------------ weights --
+    def weight_bytes_per_device(self, dtype_bytes: int = 2) -> float:
+        n = self.cfg.param_count()
+        return dtype_bytes * n / max(self.par.tp * self.par.pp, 1)
+
+    def kv_bytes_per_token(self) -> float:
+        cfg = self.cfg
+        per_layer = 2 * cfg.num_kv_heads * cfg.resolved_head_dim * 2  # bf16 k+v
+        n_attn = sum(1 for k in cfg.pattern if k in (ATTN_GLOBAL, ATTN_LOCAL))
+        return per_layer * n_attn
+
+    # ------------------------------------------------------------- layers --
+    def _attn_layer(self, kind: str, q_lens: Sequence[int],
+                    kv_lens: Sequence[int], decode: bool,
+                    bd: StepBreakdown) -> None:
+        cfg, par, ops = self.cfg, self.par, self.ops
+        tp = max(par.tp, 1)
+        d, hd = cfg.d_model, cfg.resolved_head_dim
+        H, K = cfg.num_heads, cfg.num_kv_heads
+        toks = sum(q_lens)
+        window = cfg.sliding_window if kind == ATTN_LOCAL else 0
+
+        # projections (TP-sharded over heads)
+        bd.add("qkv_gemm", ops.gemm(toks, (H + 2 * K) * hd // tp, d))
+        if decode:
+            bd.add("attn", ops.attention_decode(
+                kv_lens, H // tp, max(K // tp, 1), hd, window=window))
+        else:
+            bd.add("attn", ops.attention_prefill(
+                q_lens, kv_lens, H // tp, max(K // tp, 1), hd,
+                causal=True, window=window))
+        bd.add("o_gemm", ops.gemm(toks, d, H * hd // tp))
+        bd.add("tp_coll", ops.all_reduce(2.0 * toks * d, tp))
+
+    def _dense_ffn(self, toks: int, bd: StepBreakdown) -> None:
+        cfg, tp, ops = self.cfg, max(self.par.tp, 1), self.ops
+        n_mats = 3 if cfg.gated_mlp else 2
+        bd.add("ffn_gemm", n_mats * ops.gemm(toks, cfg.d_ff // tp, cfg.d_model))
+        bd.add("tp_coll", ops.all_reduce(2.0 * toks * cfg.d_model, tp))
+
+    def _moe_ffn(self, toks: int, bd: StepBreakdown) -> None:
+        """The MoE micro-workflow with straggler barrier."""
+        cfg, ops = self.cfg, self.ops
+        moe = cfg.moe
+        ep = max(self.par.ep, 1)
+        tp_in_expert = max(self.par.tp // ep, 1)
+        E, k = moe.num_experts, moe.top_k
+
+        # (1) gate GEMM
+        bd.add("moe_gate", ops.gemm(toks, E, cfg.d_model))
+        # (2) routing module -> assignment map
+        counts = self.routing.assign(toks, E, k, self.rng)
+        # capacity drops (same policy as models/moe.py)
+        cap = math.ceil(moe.capacity_factor_eval * toks * k / E)
+        kept = np.minimum(counts, cap)
+        bd.dropped_token_frac = 1.0 - kept.sum() / max(counts.sum(), 1)
+        # (3) dispatch all-to-all over EP group
+        a2a_bytes = 2.0 * toks * k * cfg.d_model / ep
+        bd.add("moe_a2a", ops.all_to_all(a2a_bytes, ep))
+        # (4) heterogeneous per-rank GroupedGEMM tasks -> max() barrier
+        n_mats = 3 if cfg.gated_mlp else 2
+        per_rank = split_by_rank(kept, ep)
+        times = [
+            n_mats * ops.grouped_gemm(
+                list(rc), cfg.d_model, moe.expert_d_ff // tp_in_expert)
+            for rc in per_rank
+        ]
+        t_max, t_mean = max(times), sum(times) / len(times)
+        bd.add("moe_expert_gemm", t_max)
+        bd.moe_straggler_excess += t_max - t_mean
+        # (5) combine all-to-all + shared experts + TP reduce
+        bd.add("moe_a2a", ops.all_to_all(a2a_bytes, ep))
+        if moe.num_shared_experts:
+            ff = moe.expert_d_ff * moe.num_shared_experts
+            bd.add("ffn_gemm", n_mats * ops.gemm(
+                toks, ff // max(self.par.tp, 1), cfg.d_model))
+        if tp_in_expert > 1:
+            bd.add("tp_coll", ops.all_reduce(2.0 * toks * cfg.d_model, tp_in_expert))
+
+    def _recurrent_layer(self, kind: str, toks: int, bd: StepBreakdown) -> None:
+        cfg, ops, tp = self.cfg, self.ops, max(self.par.tp, 1)
+        d = cfg.d_model
+        if kind == RWKV:
+            bd.add("rwkv_proj", 5 * ops.gemm(toks, d // tp, d))
+            # sequential state update: memory-bound state traffic
+            H, hs = d // cfg.rwkv_head_size, cfg.rwkv_head_size
+            state_bytes = 4.0 * toks * H * hs * hs / tp
+            bd.add("rwkv_scan", ops.membound(state_bytes))
+            bd.add("rwkv_out", ops.gemm(toks, d, d // tp))
+        else:  # RG-LRU
+            bd.add("rglru_proj", 2 * ops.gemm(toks, d // tp, d))
+            bd.add("rglru_gates", 2 * ops.gemm(toks, d // tp, d // tp))
+            bd.add("rglru_scan", ops.membound(4.0 * toks * d / tp))
+            bd.add("rglru_out", ops.gemm(toks, d, d // tp))
+        bd.add("tp_coll", ops.all_reduce(2.0 * toks * d, tp))
+
+    # -------------------------------------------------------------- steps --
+    def step_time(self, q_lens: Sequence[int], kv_lens: Sequence[int], *,
+                  decode: bool) -> StepBreakdown:
+        """One full model step for a (micro-)batch on one PP stage set.
+
+        q_lens: new tokens per request (1s for decode; prompt lens/chunks for
+        prefill).  kv_lens: context lengths (== q_lens for fresh prefill).
+        """
+        cfg = self.cfg
+        bd = StepBreakdown()
+        toks = int(sum(q_lens))
+        if toks == 0:
+            return bd
+        layers_per_stage = [len(cfg.pattern) // max(self.par.pp, 1)] * max(self.par.pp, 1)
+        # embed + head (memory-bound lookups + final GEMM)
+        bd.add("embed", self.ops.membound(2.0 * toks * cfg.d_model))
+        for kind in cfg.pattern:
+            if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+                self._attn_layer(kind, q_lens, kv_lens, decode, bd)
+                if cfg.moe is not None:
+                    self._moe_ffn(toks, bd)
+                else:
+                    self._dense_ffn(toks, bd)
+            else:
+                self._recurrent_layer(kind, toks, bd)
+                if kind == RECURRENT:
+                    self._dense_ffn(toks, bd)
+                # RWKV channel-mix counted inside rwkv ops via d_ff GEMMs:
+                if kind == RWKV:
+                    tp = max(self.par.tp, 1)
+                    bd.add("ffn_gemm", 2 * self.ops.gemm(
+                        toks, cfg.d_ff // tp, cfg.d_model))
+        n_logits = len(q_lens) if not decode else toks
+        bd.add("head", self.ops.gemm(n_logits, cfg.padded_vocab // max(self.par.tp, 1),
+                                     cfg.d_model))
+        # PP pipeline: with m microbatches the critical path is
+        # (pp + m - 1)/m x the per-stage time; callers pass microbatches via
+        # replica-level pipelining, here we fold the bubble factor.
+        pp = max(self.par.pp, 1)
+        if pp > 1:
+            m = max(len(q_lens), 1)
+            bd.total = bd.total * (pp + m - 1) / (m * pp) * pp
+            bd.add("pp_p2p", self.ops.p2p(2.0 * toks * cfg.d_model,
+                                          inter_node=True) * (pp - 1))
+        bd.add("engine_overhead", self.engine_overhead)
+        return bd
+
+    # convenience wrappers -------------------------------------------------
+    def prefill_time(self, prompt_lens: Sequence[int],
+                     context_lens: Optional[Sequence[int]] = None) -> StepBreakdown:
+        kv = list(context_lens) if context_lens is not None else list(prompt_lens)
+        return self.step_time(list(prompt_lens), kv, decode=False)
+
+    def decode_time(self, context_lens: Sequence[int]) -> StepBreakdown:
+        return self.step_time([1] * len(context_lens), list(context_lens),
+                              decode=True)

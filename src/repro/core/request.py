@@ -1,0 +1,75 @@
+"""Request lifecycle state machine."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+class RState(enum.Enum):
+    QUEUED_PREFILL = "queued_prefill"
+    PREFILL_RUNNING = "prefill_running"
+    PREFILL_COMPLETE = "prefill_complete"   # KV held in prefill buffer
+    KV_TRANSFER = "kv_transfer"
+    QUEUED_DECODE = "queued_decode"
+    DECODING = "decoding"
+    COMPLETE = "complete"
+
+
+# legal transitions (property-tested)
+_TRANSITIONS = {
+    RState.QUEUED_PREFILL: {RState.PREFILL_RUNNING},
+    RState.PREFILL_RUNNING: {RState.PREFILL_COMPLETE, RState.QUEUED_PREFILL},
+    RState.PREFILL_COMPLETE: {RState.KV_TRANSFER, RState.QUEUED_DECODE},
+    RState.KV_TRANSFER: {RState.QUEUED_DECODE},
+    RState.QUEUED_DECODE: {RState.DECODING},
+    RState.DECODING: {RState.COMPLETE, RState.QUEUED_DECODE},
+}
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float
+    prompt_len: int
+    output_len: int
+    state: RState = RState.QUEUED_PREFILL
+    generated: int = 0
+    prefill_progress: int = 0          # chunked-prefill bookkeeping
+    timestamps: Dict[str, float] = field(default_factory=dict)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    def to(self, state: RState, now: float) -> None:
+        allowed = _TRANSITIONS.get(self.state, set())
+        if state not in allowed:
+            raise ValueError(f"illegal transition {self.state} -> {state} "
+                             f"(rid={self.rid})")
+        self.state = state
+        self.timestamps[state.value] = now
+
+    @property
+    def context_len(self) -> int:
+        return self.prompt_len + self.generated
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.output_len
+
+    # ---- metrics -----------------------------------------------------
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    def tpot(self) -> Optional[float]:
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        if self.generated <= 1:
+            return 0.0
+        return (self.finish_time - self.first_token_time) / (self.generated - 1)
+
+    def e2e(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival

@@ -1,0 +1,78 @@
+"""Pluggable MoE routing modules.
+
+A routing module produces the token-to-expert assignment map (as per-expert
+token counts) for a batch — the input to the GroupedGEMM model and the
+straggler max() barrier.  Implementations model different imbalance regimes;
+`TraceRouting` replays counts measured from the real JAX MoE layer
+(models/moe.py surfaces them as metrics).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class RoutingModule:
+    def assign(self, n_tokens: int, n_experts: int, top_k: int,
+               rng: np.random.Generator) -> np.ndarray:
+        """Return integer token counts per expert, sum == n_tokens * top_k."""
+        raise NotImplementedError
+
+
+class BalancedRouting(RoutingModule):
+    """Perfectly load-balanced (the idealized lower bound)."""
+
+    def assign(self, n_tokens, n_experts, top_k, rng):
+        total = n_tokens * top_k
+        base = total // n_experts
+        counts = np.full(n_experts, base, np.int64)
+        counts[: total - base * n_experts] += 1
+        return counts
+
+
+class UniformRouting(RoutingModule):
+    """Multinomial over uniform expert probabilities (mild imbalance)."""
+
+    def assign(self, n_tokens, n_experts, top_k, rng):
+        return rng.multinomial(n_tokens * top_k, np.full(n_experts, 1.0 / n_experts))
+
+
+class ZipfRouting(RoutingModule):
+    """Zipf-skewed expert popularity (hot experts; heavy stragglers)."""
+
+    def __init__(self, alpha: float = 1.2):
+        self.alpha = alpha
+
+    def assign(self, n_tokens, n_experts, top_k, rng):
+        ranks = np.arange(1, n_experts + 1, dtype=np.float64)
+        p = ranks ** -self.alpha
+        rng.shuffle(p)
+        p /= p.sum()
+        return rng.multinomial(n_tokens * top_k, p)
+
+
+class TraceRouting(RoutingModule):
+    """Replay expert-load distributions captured from the real MoE layer."""
+
+    def __init__(self, fractions: Sequence[float]):
+        f = np.asarray(fractions, np.float64)
+        self.fractions = f / f.sum()
+
+    def assign(self, n_tokens, n_experts, top_k, rng):
+        assert len(self.fractions) == n_experts
+        return rng.multinomial(n_tokens * top_k, self.fractions)
+
+
+def split_by_rank(counts: np.ndarray, ep: int) -> List[np.ndarray]:
+    """Partition per-expert counts into EP-rank slices (contiguous shards)."""
+    per = len(counts) // ep
+    return [counts[r * per:(r + 1) * per] for r in range(ep)]
+
+
+ROUTERS = {
+    "balanced": BalancedRouting,
+    "uniform": UniformRouting,
+    "zipf": ZipfRouting,
+}

@@ -1,0 +1,36 @@
+"""Event tracing: in-memory ring + Chrome trace-event export."""
+from __future__ import annotations
+
+import json
+from collections import deque
+from typing import Deque, List, Optional
+
+from repro.core.events import EV, Event
+
+
+class EventTrace:
+    def __init__(self, capacity: int = 200_000):
+        self.events: Deque[tuple] = deque(maxlen=capacity)
+
+    def __call__(self, ev: Event) -> None:
+        self.events.append((ev.time, ev.kind.value, dict(ev.data)))
+
+    def filter(self, kind: EV) -> List[tuple]:
+        return [e for e in self.events if e[1] == kind.value]
+
+    def to_chrome_trace(self, path: str) -> None:
+        """Duration events per replica (BATCH_DONE carries dur) + instants."""
+        out = []
+        for t, kind, data in self.events:
+            if kind == EV.BATCH_DONE.value and "dur" in data:
+                out.append({
+                    "name": f"batch p{data.get('n_prefill', 0)}"
+                            f"/d{data.get('n_decode', 0)}",
+                    "ph": "X", "pid": 0, "tid": data.get("replica", "?"),
+                    "ts": (t - data["dur"]) * 1e6, "dur": data["dur"] * 1e6,
+                })
+            else:
+                out.append({"name": kind, "ph": "i", "pid": 0, "tid": "events",
+                            "ts": t * 1e6, "s": "g"})
+        with open(path, "w") as f:
+            json.dump({"traceEvents": out}, f)

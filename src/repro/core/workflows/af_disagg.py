@@ -1,0 +1,236 @@
+"""AF (Attention/FFN) disaggregation — MegaScale-Infer / Step-3 style.
+
+One decode step is simulated as an *event dependency graph*: the global
+batch is partitioned into m micro-batches; ATTN_COMPUTE(i,k) runs on the
+attention cluster, A2F_TRANSFER(i,k) ships activations, FFN_COMPUTE(i,k)
+runs on the FFN cluster (optionally MoE/EP), F2A_TRANSFER(i,k) returns.
+The event engine schedules each node as soon as its dependencies are met,
+capturing the ping-pong latency hiding: while A2F(i,k) is in flight the
+attention cluster computes ATTN(i+1,k).  The step time is the timestamp of
+the final FFN/F2A event — the critical path.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, ModelConfig
+from repro.core.cluster import ClusterWorker, ReplicaWorker
+from repro.core.controller import GlobalController
+from repro.core.engine import SimEngine
+from repro.core.events import EV
+from repro.core.hardware import HardwareSpec, ParallelismConfig
+from repro.core.metrics import MetricsCollector
+from repro.core.opmodels.analytical import OperatorModelSet
+from repro.core.policies.batching import ContinuousBatching
+from repro.core.policies.memory import PagedKVManager
+from repro.core.predictor import ExecutionPredictor, StepBreakdown
+from repro.core.routing import RoutingModule, split_by_rank
+from repro.core.workflows.colocated import SystemHandle, _kv_budget
+from repro.core.workflows.pd_disagg import build_pd
+
+
+@dataclass
+class AFStepStats:
+    makespan: float = 0.0
+    attn_busy: float = 0.0
+    ffn_busy: float = 0.0
+    transfer_bytes: float = 0.0
+    attn_bubble_frac: float = 0.0
+    ffn_bubble_frac: float = 0.0
+    events: int = 0
+
+
+def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
+                            ops: OperatorModelSet,
+                            context_lens: Sequence[int], *,
+                            m: int, attn_par: ParallelismConfig,
+                            ffn_par: ParallelismConfig,
+                            routing: Optional[RoutingModule] = None,
+                            rng: Optional[np.random.Generator] = None,
+                            ) -> AFStepStats:
+    """Event-dependency-graph simulation of ONE decode step (one token)."""
+    rng = rng or np.random.default_rng(0)
+    eng = SimEngine()
+    L = cfg.num_layers
+    micro = [list(c) for c in np.array_split(np.asarray(context_lens), m)]
+    micro = [c for c in micro if len(c)]
+    m_eff = len(micro)
+    d = cfg.d_model
+
+    # ---- per-(microbatch, layer) task durations --------------------------
+    def t_attn(lens: List[int], kind: str) -> float:
+        tp = max(attn_par.tp, 1)
+        H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+        window = cfg.sliding_window if kind == ATTN_LOCAL else 0
+        t = ops.gemm(len(lens), (H + 2 * K) * hd // tp, d)
+        t += ops.attention_decode(lens, H // tp, max(K // tp, 1), hd,
+                                  window=window)
+        t += ops.gemm(len(lens), d, H * hd // tp)
+        t += ops.all_reduce(2.0 * len(lens) * d, tp)
+        return t
+
+    def t_ffn(n_tok: int) -> float:
+        n_mats = 3 if cfg.gated_mlp else 2
+        if cfg.moe is None:
+            tp = max(ffn_par.tp, 1)
+            return (n_mats * ops.gemm(n_tok, cfg.d_ff // tp, d)
+                    + ops.all_reduce(2.0 * n_tok * d, tp))
+        moe = cfg.moe
+        ep = max(ffn_par.ep, ffn_par.tp, 1)
+        t = ops.gemm(n_tok, moe.num_experts, d)
+        counts = (routing.assign(n_tok, moe.num_experts, moe.top_k, rng)
+                  if routing is not None else
+                  np.full(moe.num_experts, n_tok * moe.top_k // moe.num_experts))
+        per_rank = split_by_rank(np.asarray(counts), ep)
+        times = [n_mats * ops.grouped_gemm(list(rc), d, moe.expert_d_ff)
+                 for rc in per_rank]
+        t += max(times) if times else 0.0
+        if moe.num_shared_experts:
+            t += n_mats * ops.gemm(n_tok, moe.expert_d_ff * moe.num_shared_experts, d)
+        return t
+
+    def t_xfer(n_tok: int) -> float:
+        return ops.p2p(2.0 * n_tok * d, inter_node=True)
+
+    attn_kinds = [k for k in cfg.pattern]
+    stats = AFStepStats()
+
+    # ---- resources & dependency-driven scheduling -------------------------
+    attn_free = [0.0]   # next-available times (single pipeline per cluster)
+    ffn_free = [0.0]
+    done_f2a = {i: 0.0 for i in range(m_eff)}  # F2A(i, k-1) completion
+
+    # we iterate layers in order; within a layer, micro-batches are admitted
+    # in index order — the event engine resolves the interleaving.
+    pending = {}
+
+    def schedule_attn(i: int, k: int, ev=None):
+        kind = attn_kinds[k]
+        if kind not in (ATTN_GLOBAL, ATTN_LOCAL):
+            # recurrent block: runs on the attention cluster too
+            dur = ops.gemm(len(micro[i]), d, d) * 3
+        else:
+            dur = t_attn(micro[i], kind)
+        start = max(eng.now, attn_free[0], done_f2a[i])
+        attn_free[0] = start + dur
+        stats.attn_busy += dur
+        eng.at(start + dur, EV.ATTN_COMPUTE_DONE,
+               lambda ev: schedule_a2f(i, k), i=i, k=k)
+
+    def schedule_a2f(i: int, k: int):
+        dur = t_xfer(len(micro[i]))
+        stats.transfer_bytes += 2.0 * len(micro[i]) * d
+        eng.at(eng.now + dur, EV.A2F_TRANSFER_DONE,
+               lambda ev: schedule_ffn(i, k), i=i, k=k)
+
+    def schedule_ffn(i: int, k: int):
+        dur = t_ffn(len(micro[i]))
+        start = max(eng.now, ffn_free[0])
+        ffn_free[0] = start + dur
+        stats.ffn_busy += dur
+        eng.at(start + dur, EV.FFN_COMPUTE_DONE,
+               lambda ev: schedule_f2a(i, k), i=i, k=k)
+
+    def schedule_f2a(i: int, k: int):
+        dur = t_xfer(len(micro[i]))
+        stats.transfer_bytes += 2.0 * len(micro[i]) * d
+
+        def done(ev):
+            done_f2a[i] = eng.now
+            if k + 1 < L:
+                schedule_attn(i, k + 1)
+        eng.at(eng.now + dur, EV.F2A_TRANSFER_DONE, done, i=i, k=k)
+
+    for i in range(m_eff):
+        schedule_attn(i, 0)
+    eng.run()
+
+    stats.makespan = eng.now
+    stats.events = eng.processed
+    if stats.makespan > 0:
+        stats.attn_bubble_frac = 1.0 - stats.attn_busy / stats.makespan
+        stats.ffn_bubble_frac = 1.0 - stats.ffn_busy / stats.makespan
+    return stats
+
+
+class AFPipelinePredictor(ExecutionPredictor):
+    """ExecutionPredictor whose decode step runs the AF event graph."""
+
+    def __init__(self, *args, m: int = 2,
+                 attn_par: Optional[ParallelismConfig] = None,
+                 ffn_par: Optional[ParallelismConfig] = None, **kw):
+        super().__init__(*args, **kw)
+        self.m = m
+        self.attn_par = attn_par or self.par
+        self.ffn_par = ffn_par or self.par
+        self.last_stats: Optional[AFStepStats] = None
+
+    def step_time(self, q_lens, kv_lens, *, decode: bool) -> StepBreakdown:
+        if not decode:
+            return super().step_time(q_lens, kv_lens, decode=False)
+        stats = simulate_af_decode_step(
+            self.cfg, self.hw, self.ops, list(kv_lens), m=self.m,
+            attn_par=self.attn_par, ffn_par=self.ffn_par,
+            routing=self.routing, rng=self.rng)
+        self.last_stats = stats
+        bd = StepBreakdown()
+        bd.add("af_pipeline", stats.makespan)
+        bd.add("engine_overhead", self.engine_overhead)
+        bd.parts["attn_bubble_frac"] = stats.attn_bubble_frac
+        bd.parts["ffn_bubble_frac"] = stats.ffn_bubble_frac
+        return bd
+
+
+def build_af(cfg: ModelConfig, hw: HardwareSpec, *,
+             n_prefill: int = 1, n_decode: int = 1, m: int = 2,
+             attn_par: Optional[ParallelismConfig] = None,
+             ffn_par: Optional[ParallelismConfig] = None,
+             prefill_par: Optional[ParallelismConfig] = None,
+             ops: Optional[OperatorModelSet] = None,
+             routing=None, seed: int = 0) -> SystemHandle:
+    """PD front + AF-disaggregated decode (as deployed by MegaScale-Infer)."""
+    engine = SimEngine()
+    ops = ops or OperatorModelSet(hw)
+    attn_par = attn_par or ParallelismConfig(tp=1)
+    ffn_par = ffn_par or ParallelismConfig(tp=1, ep=1)
+    prefill_par = prefill_par or ParallelismConfig(tp=1)
+    metrics = MetricsCollector()
+
+    pred0 = ExecutionPredictor(cfg, attn_par, hw, ops)
+    controller = GlobalController(
+        engine, mode="pd", clusters={},
+        kv_bytes_per_token=pred0.kv_bytes_per_token(),
+        transfer_bw=hw.inter_node_bw, metrics=metrics)
+    hooks = controller.hooks()
+
+    pre = []
+    for i in range(n_prefill):
+        p = ExecutionPredictor(cfg, prefill_par, hw, ops, routing=routing,
+                               seed=seed + i)
+        mem = PagedKVManager(_kv_budget(cfg, hw, prefill_par, p),
+                             p.kv_bytes_per_token())
+        pre.append(ReplicaWorker(engine, f"prefill{i}", p,
+                                 ContinuousBatching(max_batched_tokens=16384),
+                                 mem, hooks, role="prefill"))
+    dec = []
+    for i in range(n_decode):
+        p = AFPipelinePredictor(cfg, attn_par, hw, ops, routing=routing,
+                                seed=seed + 50 + i, m=m,
+                                attn_par=attn_par, ffn_par=ffn_par)
+        mem = PagedKVManager(_kv_budget(cfg, hw, attn_par, p),
+                             p.kv_bytes_per_token())
+        dec.append(ReplicaWorker(engine, f"af-decode{i}", p,
+                                 ContinuousBatching(max_num_seqs=512),
+                                 mem, hooks, role="decode"))
+
+    prefill = ClusterWorker("prefill", "prefill", pre)
+    decode = ClusterWorker("decode", "decode", dec)
+    controller.clusters.update({"prefill": prefill, "decode": decode})
+    n_dev = (n_prefill * prefill_par.devices
+             + n_decode * (attn_par.devices + ffn_par.devices))
+    return SystemHandle(engine, controller,
+                        {"prefill": prefill, "decode": decode}, n_dev)

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the perf-critical operators the paper models:
+FlashAttention (prefill), FlashDecode (KV-cache decode), GroupedGEMM (MoE).
+ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles."""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,100 @@
+"""Fused chunked-WKV6 Pallas kernel (the next lever from §Perf hillclimb 2).
+
+Implements the chunked-parallel RWKV6 recurrence (see models/rwkv6.py
+`_wkv_chunked`) with the whole per-chunk working set — r/k/v/decay tiles,
+the (C, C) intra-chunk attention and the (hs, hs) running state — resident
+in VMEM across all three chunk matmuls.  The XLA version materializes each
+intermediate at a fusion boundary; this kernel's HBM traffic is exactly the
+r/k/v/w/y streams, which is what the §Perf projection (t_m ≈ 1.5–2 s for
+rwkv6 x train_4k) assumes.
+
+Grid: (B*H, nb) — chunks are the sequential (carry) dimension; the state
+lives in an f32 VMEM scratch across chunk steps.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *,
+                C: int, hs: int, nb: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[...].astype(jnp.float32)          # (C, hs)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    lw = lw_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)          # (1, hs)
+    S = s_ref[...]                              # (hs, hs)
+
+    clw = jnp.cumsum(lw, axis=0)
+    cw_prev = jnp.exp(clw - lw)                 # prod_{s<t} w_s
+    r_dec = r * cw_prev
+    k_dec = k * jnp.exp(jnp.minimum(-clw, 60.0))
+
+    # inter-chunk + intra-chunk + bonus
+    y = jax.lax.dot_general(r_dec, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    att = jax.lax.dot_general(r_dec, k_dec, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    att = jnp.where(ti > tj, att, 0.0)
+    y = y + jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    bonus = jnp.sum(r * u * k, axis=1, keepdims=True)
+    y = y + bonus * v
+    o_ref[...] = y.astype(o_ref.dtype)
+
+    # state propagation to chunk exit
+    cw_last = jnp.exp(clw[-1:, :])              # (1, hs)
+    k_carry = k * (cw_last * jnp.exp(jnp.minimum(-clw, 60.0)))
+    s_ref[...] = S * cw_last.T + jax.lax.dot_general(
+        k_carry, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                u: jax.Array, *, chunk: int = 16,
+                interpret: bool = True) -> jax.Array:
+    """r/k/v/w (B,T,H,hs), u (H,hs) -> y (B,T,H,hs).  w = per-step decay
+    in (0,1); zero initial state (training from sequence start)."""
+    B, T, H, hs = r.shape
+    C = min(chunk, T)
+    assert T % C == 0, (T, C)
+    nb = T // C
+
+    def prep(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, hs)
+
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30))
+    ur = jnp.broadcast_to(u[None], (B, H, hs)).reshape(B * H, 1, hs)
+
+    kernel = functools.partial(_wkv_kernel, C=C, hs=hs, nb=nb)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nb),
+        in_specs=[
+            pl.BlockSpec((None, C, hs), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((None, C, hs), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((None, C, hs), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((None, C, hs), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((None, 1, hs), lambda bh, ic: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, C, hs), lambda bh, ic: (bh, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, T, hs), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
+        interpret=interpret,
+    )(prep(r), prep(k), prep(v), prep(lw), ur)
+    return out.reshape(B, H, T, hs).transpose(0, 2, 1, 3)

@@ -1,0 +1,372 @@
+"""Scan-aware HLO cost extraction.
+
+``compiled.cost_analysis()`` counts a ``while`` (lax.scan) body ONCE
+(verified empirically), which would understate a scanned-transformer's
+FLOPs/bytes by ~num_layers x.  This module parses the compiled HLO text
+into a computation call graph, multiplies per-computation costs by the
+product of ``known_trip_count`` values along the call chain, and returns
+corrected totals:
+
+- flops: dot/convolution FLOPs (dense algebra dominates; elementwise ops
+  are counted at 1 flop/element which is negligible but keeps honesty),
+- bytes: HBM traffic under XLA's fusion model — each *top-level* op in a
+  computation reads its operands and writes its output; ops inside fusions
+  are free (that is how XLA itself accounts bytes),
+- collective bytes per kind (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute), using output-shape bytes.
+
+This parser feeds both EXPERIMENTS.md §Roofline and the Frontier
+simulator's TPU operator cost model.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "s2": 1, "u2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# NB: parameters may be tuple-typed (nested parens) — match greedily to the
+# arrow.  Instruction lines contain " = " and are excluded in parse_hlo.
+_DEF_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_CALLED_BRACED_RE = re.compile(r"(?:calls|branch_computations)=\{([^}]*)\}")
+_CALLED_SINGLE_RE = re.compile(r"(?:to_apply|body|condition|calls)=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _parse_shapes(s: str) -> List[Tuple[str, List[int]]]:
+    """All dtype[dims] shape tokens in a string prefix (before operands)."""
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        out.append((dt, [int(x) for x in dims.split(",") if x] if dims else []))
+    return out
+
+
+def _nbytes(dt: str, dims: List[int]) -> int:
+    n = DTYPE_BYTES.get(dt, 4)
+    for d in dims:
+        n *= d
+    return n
+
+
+def _numel(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    out_shapes: List[Tuple[str, List[int]]]
+    body: str
+    called: List[str] = field(default_factory=list)
+    trip_count: int = 1
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    is_fusion_body: bool = False
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if " = " not in line:
+            d = _DEF_RE.match(line)
+            if d and "{" in line:
+                cur = Computation(d.group(1))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        is_root = bool(re.match(r"^\s*ROOT\b", line))
+        name, rest = m.group(1), m.group(2)
+        # op comes after shape: "f32[8,16]{1,0} dot(%a, %b), ..."
+        opm = re.search(r"\}?\s*([a-z][a-z0-9\-_]*)\(", rest)
+        op = opm.group(1) if opm else ""
+        # output shapes: everything before the op name
+        cut = opm.start() if opm else len(rest)
+        out_shapes = _parse_shapes(rest[:cut])
+        ins = Instr(name, op, out_shapes, rest, is_root=is_root)
+        rest_wo = _CALLED_BRACED_RE.sub(" ", rest)
+        for grp in _CALLED_BRACED_RE.findall(rest):
+            for c in grp.split(","):
+                c = c.strip().lstrip("%")
+                if c:
+                    ins.called.append(c)
+        for c in _CALLED_SINGLE_RE.findall(rest_wo):
+            ins.called.append(c)
+        tm = _TRIP_RE.search(rest)
+        if tm:
+            ins.trip_count = int(tm.group(1))
+        cur.instrs.append(ins)
+    return comps
+
+
+def _dot_flops(instr: Instr, comps: Dict[str, Computation],
+               operand_shapes: Dict[str, List[Tuple[str, List[int]]]]) -> float:
+    """2 * numel(out) * K for dot ops; K from contracting dims of lhs."""
+    body = instr.body
+    out_elems = sum(_numel(d) for _, d in instr.out_shapes) or 1
+    km = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", body)
+    ops = _OPERAND_RE.findall(body.split("(", 1)[1]) if "(" in body else []
+    k = 1
+    if km and ops:
+        lhs_shape = operand_shapes.get(ops[0])
+        if lhs_shape:
+            dims = lhs_shape[0][1]
+            for idx in (int(x) for x in km.group(1).split(",") if x):
+                if idx < len(dims):
+                    k *= dims[idx]
+    return 2.0 * out_elems * k
+
+
+def _operands(i: Instr) -> List[str]:
+    if "(" not in i.body:
+        return []
+    return _OPERAND_RE.findall(i.body.split("(", 1)[1].split(")")[0])
+
+
+_PARAM_NUM_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _instr_bytes(i: Instr, comps: Dict[str, Computation],
+                 shapes: Dict[str, List[Tuple[str, List[int]]]]) -> float:
+    """HBM bytes for one top-level instruction under XLA's in-place model.
+
+    dynamic-(update-)slice and scatter touch only the slice/updates (the
+    big aliased buffer is updated in place) — critical for scanned models
+    whose stacked weights / KV caches / ys-accumulators would otherwise be
+    charged O(L^2) traffic.  XLA routinely FUSES those slices into consumer
+    fusions, so for fusion instructions we inspect the body: an operand that
+    is only dynamic-sliced inside is charged at slice size; an operand that
+    is the target of a dynamic-update-slice is charged at update size.
+    """
+    out_b = sum(_nbytes(dt, d) for dt, d in i.out_shapes)
+    ops_ = _operands(i)
+
+    def op_bytes(o: str) -> int:
+        return sum(_nbytes(dt, d) for dt, d in shapes.get(o, []))
+
+    if i.op == "scatter":
+        upd_b = op_bytes(ops_[2]) if len(ops_) > 2 else out_b
+        return 3.0 * upd_b
+    if i.op == "gather":
+        return 2.0 * out_b
+    if i.op == "dynamic-slice":
+        return 2.0 * out_b
+    if i.op == "dynamic-update-slice":
+        upd_b = op_bytes(ops_[1]) if len(ops_) > 1 else out_b
+        return 3.0 * upd_b
+
+    if i.op != "fusion":
+        return float(out_b + sum(op_bytes(o) for o in ops_))
+
+    # ---- fusion: slice-aware operand accounting ---------------------------
+    body: Optional[Computation] = None
+    for callee in i.called:
+        body = comps.get(callee)
+        if body is not None:
+            break
+    if body is None or not body.instrs:
+        return float(out_b + sum(op_bytes(o) for o in ops_))
+
+    param_of: Dict[str, int] = {}
+    for instr in body.instrs:
+        if instr.op == "parameter":
+            m = _PARAM_NUM_RE.search(instr.body)
+            if m:
+                param_of[instr.name] = int(m.group(1))
+    # alias pass-through: copy/bitcast/convert/reshape chains keep pointing
+    # at the underlying parameter (these ops are layout/dtype plumbing that
+    # does not exist on the TPU target for in-place scan buffers)
+    for instr in body.instrs:
+        if instr.op in ("copy", "bitcast", "convert", "reshape", "transpose"):
+            bops = _operands(instr)
+            if bops and bops[0] in param_of:
+                param_of[instr.name] = param_of[bops[0]]
+
+    charge: Dict[int, float] = {}       # param idx -> bytes override
+    dus_update_b = 0.0
+    has_dus = False
+    for instr in body.instrs:
+        bops = _operands(instr)
+        if instr.op == "dynamic-slice" and bops and bops[0] in param_of:
+            idx = param_of[bops[0]]
+            sl = sum(_nbytes(dt, d) for dt, d in instr.out_shapes)
+            charge[idx] = charge.get(idx, 0.0) + sl
+        elif instr.op == "dynamic-update-slice" and bops and bops[0] in param_of:
+            has_dus = True
+            idx = param_of[bops[0]]
+            upd = op_bytes(bops[1]) if len(bops) > 1 and bops[1] in shapes \
+                else sum(_nbytes(dt, d) for dt, d in instr.out_shapes)
+            if len(bops) > 1:
+                # update operand may itself be a body instr with known shape
+                b1 = bops[1]
+                if b1 in shapes:
+                    upd = op_bytes(b1)
+            charge[idx] = charge.get(idx, 0.0) + 2.0 * upd
+            dus_update_b += upd
+        elif instr.op == "dynamic-update-slice":
+            has_dus = True
+            dus_update_b += sum(_nbytes(dt, d) for dt, d in instr.out_shapes[:1])
+
+    in_b = 0.0
+    for pos, o in enumerate(ops_):
+        in_b += charge.get(pos, None) if pos in charge else op_bytes(o)
+    if has_dus:
+        # the fusion writes only the updated slices (aliased big buffer)
+        out_b = max(dus_update_b, 0.0)
+    return float(out_b + in_b)
+
+
+def analyze(text: str, *, entry: Optional[str] = None) -> Dict[str, float]:
+    """Corrected totals from compiled (SPMD, per-device) HLO text."""
+    comps = parse_hlo(text)
+    if not comps:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+
+    # operand shape lookup per computation (instr name -> shapes)
+    shapes: Dict[str, List[Tuple[str, List[int]]]] = {}
+    for c in comps.values():
+        for i in c.instrs:
+            shapes[i.name] = i.out_shapes
+
+    # entry = computation never called by others, preferring one named main*
+    called_by = defaultdict(list)
+    for c in comps.values():
+        for i in c.instrs:
+            for callee in i.called:
+                if callee in comps:
+                    called_by[callee].append(c.name)
+    if entry is None:
+        roots = [n for n in comps if n not in called_by]
+        mains = [n for n in roots if n.startswith("main")]
+        entry = mains[0] if mains else (roots[0] if roots else next(iter(comps)))
+
+    # fusion bodies: bytes/flops of *internal* ops follow XLA's model:
+    # internal elementwise are free for bytes; dots inside fusions still
+    # count flops.  Identify them from fusion instrs' `calls=`.
+    fusion_bodies = set()
+    for c in comps.values():
+        for i in c.instrs:
+            if i.op == "fusion":
+                for callee in i.called:
+                    fusion_bodies.add(callee)
+
+    totals = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
+              "transcendentals": 0.0}
+    per_coll: Dict[str, float] = defaultdict(float)
+
+    # producer index (instr name -> Instr) for collective dtype tracing
+    producer: Dict[str, Instr] = {}
+    for c in comps.values():
+        for i in c.instrs:
+            producer[i.name] = i
+
+    SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "while", "conditional", "call", "custom-call",
+                      "after-all", "partition-id", "replica-id"}
+
+    seen_stack = set()
+
+    def walk(name: str, mult: float, in_fusion: bool):
+        if name not in comps or name in seen_stack:
+            return
+        seen_stack.add(name)
+        c = comps[name]
+        for i in c.instrs:
+            m = mult * (i.trip_count if i.op == "while" else 1)
+            # recurse into called computations
+            if i.op in ("while", "conditional", "call", "fusion"):
+                sub_fusion = in_fusion or i.op == "fusion"
+                for callee in i.called:
+                    if i.op == "while":
+                        # body and condition both run trip_count times
+                        walk(callee, mult * i.trip_count, in_fusion)
+                    elif i.op == "conditional":
+                        walk(callee, mult, in_fusion)  # upper bound: all branches? take max later
+                    else:
+                        walk(callee, mult, sub_fusion)
+            elif i.called and i.op not in ("all-reduce", "reduce", "scatter",
+                                           "reduce-scatter", "reduce-window",
+                                           "sort", "map", "select-and-scatter",
+                                           "all-to-all"):
+                for callee in i.called:
+                    walk(callee, mult, in_fusion)
+
+            if i.op in ("dot", "convolution"):
+                totals["flops"] += mult * _dot_flops(i, comps, shapes)
+            if i.op in COLLECTIVES:
+                nb = sum(_nbytes(dt, d) for dt, d in i.out_shapes)
+                # XLA:CPU hoists bf16->f32 converts above collectives; on
+                # the TPU target the collective runs at the program dtype.
+                # Charge at the pre-convert width when the operand is a
+                # convert(-fusion) of a narrower tensor.
+                ops_c = _operands(i)
+                if ops_c:
+                    prod = producer.get(ops_c[0])
+                    if prod is not None and "convert" in prod.name:
+                        pops = _operands(prod)
+                        if pops and pops[0] in shapes and shapes[pops[0]]:
+                            src_dt = shapes[pops[0]][0][0]
+                            out_dt = i.out_shapes[0][0] if i.out_shapes else "f32"
+                            sb = DTYPE_BYTES.get(src_dt, 4)
+                            ob = DTYPE_BYTES.get(out_dt, 4)
+                            if sb < ob:
+                                nb = nb * sb / ob
+                totals["collective_bytes"] += mult * nb
+                per_coll[i.op] += mult * nb
+
+            if not in_fusion and i.op not in SKIP_BYTES_OPS and i.op:
+                totals["bytes"] += mult * _instr_bytes(i, comps, shapes)
+        seen_stack.discard(name)
+
+    walk(entry, 1.0, False)
+    for k, v in per_coll.items():
+        totals[f"coll_{k}"] = v
+    return totals
+
+
+def roofline_terms(costs: Dict[str, float], *, n_chips: int,
+                   peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                   ici_bw: float = 50e9, flops_total_all_chips: bool = False,
+                   ) -> Dict[str, float]:
+    """Three roofline terms in seconds.  `costs` are per-device (SPMD HLO)."""
+    t_compute = costs["flops"] / peak_flops
+    t_memory = costs["bytes"] / hbm_bw
+    t_coll = costs["collective_bytes"] / ici_bw
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom[1],
+    }

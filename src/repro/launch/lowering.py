@@ -1,0 +1,130 @@
+"""Step construction + sharding trees shared by dryrun.py, train.py, tests.
+
+``build_step(cfg, mesh, shape)`` returns everything needed to lower one
+(architecture x input-shape) cell on a mesh without allocating anything:
+the step callable, ShapeDtypeStruct args, NamedSharding in/out trees and
+donation indices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import AxisRules, is_pd, shape_tree
+from repro.models.model import build_model
+from repro.training.optimizer import AdamW, AdamWConfig, make_train_step
+
+
+@dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]                 # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+    model: Any
+    meta: Dict[str, Any]
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def batch_shardings(ax: AxisRules, mesh, specs: Dict[str, jax.ShapeDtypeStruct]):
+    out = {}
+    for k, v in specs.items():
+        dims = [None] * len(v.shape)
+        if len(v.shape) >= 1:
+            dims[0] = ax.batch(v.shape[0])
+        out[k] = NamedSharding(mesh, P(*dims))
+    return out
+
+
+def scan_trip_counts(cfg: ModelConfig) -> Dict[str, int]:
+    period = len(cfg.block_pattern)
+    tc = {"layer_groups": cfg.num_layers // period}
+    if cfg.encoder_layers:
+        tc["encoder_groups"] = cfg.encoder_layers
+    return tc
+
+
+def build_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
+               remat: str = "none", param_dtype=jnp.bfloat16,
+               zero1: bool = True,
+               options: Optional[Dict[str, Any]] = None) -> StepBundle:
+    ax = AxisRules(mesh, options)
+    model = build_model(cfg, ax, remat=remat)
+    pds = model.pds()
+    params_sds = shape_tree(pds, param_dtype)
+    params_specs = ax.spec_tree(pds)
+    params_sh = _ns(mesh, params_specs)
+    in_specs = model.input_specs(shape)
+    batch_sh = batch_shardings(ax, mesh, in_specs)
+
+    meta = {
+        "arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "param_count": None,  # filled below
+        "scan_trip_counts": scan_trip_counts(cfg),
+    }
+    n_params = sum(
+        int(jnp.prod(jnp.array(l.shape))) if l.shape else 1
+        for l in jax.tree_util.tree_leaves(params_sds))
+    meta["param_count"] = n_params
+
+    if shape.kind == "train":
+        opt = AdamW(AdamWConfig(zero1=zero1), ax)
+        opt_pds = opt.state_pds(pds)
+        opt_sds = shape_tree(opt_pds, jnp.float32)
+        opt_sh = _ns(mesh, ax.spec_tree(opt_pds))
+        step = make_train_step(model, opt)
+        return StepBundle(
+            name="train_step", fn=step,
+            args=(params_sds, opt_sds, in_specs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            donate_argnums=(0, 1), model=model, meta=meta)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+        return StepBundle(
+            name="prefill_step", fn=prefill_step,
+            args=(params_sds, in_specs),
+            in_shardings=(params_sh, batch_sh),
+            donate_argnums=(), model=model, meta=meta)
+
+    # decode: one new token against a KV cache of shape.seq_len
+    B = shape.global_batch
+    cache_pds = model.cache_pds(B, shape.seq_len)
+    cache_sds = shape_tree(cache_pds, param_dtype)
+    cache_sh = _ns(mesh, AxisRules(mesh).spec_tree(cache_pds))
+    tok_sds = in_specs["tokens"]
+    tok_sh = NamedSharding(mesh, P(AxisRules(mesh).batch(B), None))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode(params, cache, tokens, pos)
+
+    meta["cache_bytes_global"] = sum(
+        int(jnp.prod(jnp.array(l.shape))) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(cache_sds))
+    return StepBundle(
+        name="serve_step", fn=serve_step,
+        args=(params_sds, cache_sds, tok_sds, pos_sds),
+        in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+        donate_argnums=(1,), model=model, meta=meta)
+
+
+def lower_step(bundle: StepBundle, mesh):
+    jfn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                  donate_argnums=bundle.donate_argnums)
+    with jax.set_mesh(mesh):
+        lowered = jfn.lower(*bundle.args)
+    return lowered

@@ -1,0 +1,121 @@
+"""End-to-end training driver.
+
+Runs a real training loop on the local devices (CPU in this container; the
+same code path jit-lowers on the production meshes — see dryrun.py).
+Supports any --arch (reduced via --smoke for laptop scale or a custom small
+config), checkpoint/restart (--resume), and deterministic data.
+
+examples/train_lm.py drives this for the ~100M-class run.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_mesh
+from repro.models.common import AxisRules, init_tree
+from repro.models.model import build_model
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import AdamW, AdamWConfig, make_train_step
+
+
+def small_config(base: ModelConfig, *, layers: int, d_model: int,
+                 d_ff: int, vocab: int, heads: int) -> ModelConfig:
+    return dataclasses.replace(
+        base, num_layers=layers, d_model=d_model, d_ff=d_ff,
+        vocab_size=vocab, num_heads=heads,
+        num_kv_heads=min(base.num_kv_heads, heads), head_dim=d_model // heads)
+
+
+def run(arch: str = "yi-9b", *, smoke: bool = True, steps: int = 50,
+        seq_len: int = 128, global_batch: int = 8, lr: float = 1e-3,
+        ckpt_dir: str = "", ckpt_every: int = 25, resume: bool = False,
+        mesh_shape=None, log_every: int = 10, size: str = "smoke",
+        dtype=jnp.float32, seed: int = 0, remat: str = "none"):
+    if size == "100m":
+        cfg = small_config(get_config(arch), layers=8, d_model=512,
+                           d_ff=2048, vocab=8192, heads=8)
+    else:
+        cfg = get_config(arch, smoke=smoke)
+
+    if mesh_shape:
+        mesh = make_mesh(mesh_shape, ("data", "model")[: len(mesh_shape)])
+        ax = AxisRules(mesh)
+    else:
+        mesh, ax = None, AxisRules(None)
+
+    model = build_model(cfg, ax, remat=remat)
+    opt = AdamW(AdamWConfig(lr=lr, zero1=mesh is not None), ax)
+    params = init_tree(jax.random.PRNGKey(seed), model.pds(), dtype)
+    opt_state = opt.init(params)
+    start_step = 0
+    if resume and ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+        params, opt_state, start_step, _ = ckpt.restore(
+            ckpt_dir, params_like=params, opt_like=opt_state)
+        print(f"resumed from step {start_step}")
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                                  global_batch=global_batch, seed=seed))
+    step_fn = make_train_step(model, opt)
+    if mesh is not None:
+        with jax.set_mesh(mesh):
+            step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, start_step + steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        if mesh is not None:
+            with jax.set_mesh(mesh):
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == start_step + steps - 1:
+            dt = time.time() - t0
+            tok_s = (step - start_step + 1) * global_batch * seq_len / dt
+            print(f"step {step:5d} loss {loss:.4f} ({tok_s:,.0f} tok/s)")
+        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+            path = ckpt.save(ckpt_dir, params=params, opt_state=opt_state,
+                             step=step + 1,
+                             extra={"arch": cfg.name, "loss": loss})
+            print(f"checkpoint -> {path}")
+    return {"first_loss": losses[0], "last_loss": losses[-1],
+            "losses": losses, "params": params, "opt_state": opt_state}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--size", default="smoke", choices=["smoke", "100m"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    a = ap.parse_args()
+    out = run(a.arch, smoke=True, steps=a.steps, seq_len=a.seq_len,
+              global_batch=a.global_batch, lr=a.lr, ckpt_dir=a.ckpt_dir,
+              ckpt_every=a.ckpt_every, resume=a.resume, size=a.size,
+              log_every=a.log_every)
+    print(f"loss: {out['first_loss']:.4f} -> {out['last_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.model import LM, EncDec, build_model  # noqa: F401
+from repro.models.common import AxisRules, init_tree, shape_tree, NO_RULES  # noqa: F401

@@ -1,0 +1,35 @@
+"""Dense FFN: gated (SwiGLU/GeGLU) or plain two-layer, megatron TP over d_ff."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import PD, AxisRules, activation
+
+
+def mlp_pds(cfg: ModelConfig, d_ff: int | None = None) -> Dict[str, PD]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    p = {
+        "w_in": PD((d, ff), ("embed", "mlp")),
+        "w_out": PD((ff, d), ("mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = PD((d, ff), ("embed", "mlp"))
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p, x: jax.Array, ax: AxisRules) -> jax.Array:
+    act = activation(cfg.mlp_act)
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = ax.constrain(h, "batch", None, "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    return ax.constrain(y, "batch", None, "embed")

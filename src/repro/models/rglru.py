@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma, arXiv:2402.19427).
+
+Block: y = W_out( GeLU(W_gate x)  ⊙  RG-LRU( conv1d( W_x x ) ) )
+
+RG-LRU recurrence (per channel, f32):
+    r_t = sigmoid(W_r u_t + b_r)            recurrence gate
+    i_t = sigmoid(W_i u_t + b_i)            input gate
+    a_t = exp(-c * softplus(Λ) * r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ u_t)
+
+State is O(d) per layer => recurrentgemma runs the long_500k decode shape.
+The temporal conv1d (width 4) keeps a (width-1)-token tail as decode state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import PD, AxisRules
+
+
+def rglru_pds(cfg: ModelConfig) -> Dict[str, PD]:
+    d = cfg.d_model
+    w = cfg.conv1d_width
+    return {
+        "w_x": PD((d, d), ("embed", "mlp")),
+        "w_gate": PD((d, d), ("embed", "mlp")),
+        "conv_w": PD((w, d), (None, "mlp"), 0.02),
+        "conv_b": PD((d,), ("mlp",), "zeros"),
+        "w_r": PD((d, d), ("mlp", "mlp")),
+        "b_r": PD((d,), ("mlp",), "zeros"),
+        "w_i": PD((d, d), ("mlp", "mlp")),
+        "b_i": PD((d,), ("mlp",), "zeros"),
+        "lam": PD((d,), ("mlp",), 0.5),      # Λ (softplus'd)
+        "w_out": PD((d, d), ("mlp", "embed")),
+    }
+
+
+def _conv1d(u: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Causal depthwise conv.  u (B,T,D); tail (B,W-1,D) from previous chunk."""
+    W = w.shape[0]
+    ext = jnp.concatenate([tail, u], axis=1)            # (B, T+W-1, D)
+    out = jnp.zeros_like(u)
+    for i in range(W):
+        out = out + ext[:, i:i + u.shape[1], :] * w[W - 1 - i]
+    new_tail = ext[:, -(W - 1):, :] if W > 1 else tail
+    return out + b, new_tail
+
+
+def _gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_r"].astype(jnp.float32) + p["b_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    c = 8.0
+    log_a = -c * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * uf)
+    return a, gated_in
+
+
+def rglru_apply(cfg: ModelConfig, p, x, ax: AxisRules, *,
+                conv_tail, h0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence recurrent block.  Returns (y, new_conv_tail, h_last)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_x"])
+    u = ax.constrain(u, "batch", None, "mlp")
+    u, new_tail = _conv1d(u, p["conv_w"], p["conv_b"], conv_tail)
+
+    a, gin = _gates(p, u)                               # (B,T,D) f32
+    aT, ginT = a.transpose(1, 0, 2), gin.transpose(1, 0, 2)
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), (aT, ginT))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    h = ax.constrain(h, "batch", None, "mlp")
+
+    y = jnp.einsum("bsf,fd->bsd", gate * h, p["w_out"])
+    return ax.constrain(y, "batch", None, "embed"), new_tail, h_last
+
+
+def rglru_decode(cfg: ModelConfig, p, x, ax: AxisRules, *,
+                 conv_tail, h0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token step.  x (B,1,D); conv_tail (B,W-1,D); h0 (B,D)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_x"])
+    W = p["conv_w"].shape[0]
+    ext = jnp.concatenate([conv_tail, u], axis=1)       # (B,W,D)
+    # ext[:, -1] is the current token and must pair with conv_w[0] (train
+    # path pairs w[j] with u_{t-j}), hence the flip.
+    conv = jnp.einsum("bwd,wd->bd", ext, p["conv_w"][::-1]) + p["conv_b"]
+    new_tail = ext[:, 1:, :]
+
+    a, gin = _gates(p, conv[:, None, :])
+    h = a[:, 0] * h0.astype(jnp.float32) + gin[:, 0]
+    y = jnp.einsum("bf,fd->bd", (gate[:, 0] * h.astype(x.dtype)), p["w_out"])[:, None]
+    return ax.constrain(y, "batch", None, "embed"), new_tail, h

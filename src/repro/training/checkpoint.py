@@ -1,0 +1,107 @@
+"""Checkpoint/restore with elastic resharding.
+
+Fault-tolerance substrate: step-atomic writes (tmp dir + rename), full
+round-trip of params/opt-state/step/data-state, and restore onto a
+DIFFERENT mesh (elastic scaling) — the restore path device_puts each tensor
+with the NamedSharding derived from the *target* mesh's axis rules, so a
+checkpoint taken on (16,16) loads onto (2,16,16) or a single host.
+
+In a real multi-host deployment each process writes its local shards
+(tensorstore/OCDBT); in this single-host container the store is one .npz
+per checkpoint plus a JSON manifest — the resharding logic is identical.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(path: str, *, params, opt_state=None, step: int = 0,
+         extra: Optional[Dict] = None) -> str:
+    """Atomic checkpoint write; returns the final directory."""
+    path = Path(path)
+    final = path / f"step_{step:08d}"
+    tmp = path / f".tmp_step_{step:08d}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    blobs = {}
+    for prefix, tree in (("params", params), ("opt", opt_state or {})):
+        for k, v in _flatten(tree).items():
+            blobs[f"{prefix}/{k}"] = np.asarray(jax.device_get(v))
+    np.savez(tmp / "tensors.npz", **blobs)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "keys": sorted(blobs),
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # prune stale tmp dirs from crashed writers
+    for stale in path.glob(".tmp_step_*"):
+        shutil.rmtree(stale, ignore_errors=True)
+    return str(final)
+
+
+def latest_step(path: str) -> Optional[int]:
+    p = Path(path)
+    if not p.exists():
+        return None
+    steps = [int(d.name.split("_")[1]) for d in p.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, *, params_like, opt_like=None,
+            shardings=None, opt_shardings=None,
+            step: Optional[int] = None) -> Tuple[Any, Any, int, Dict]:
+    """Load a checkpoint onto (possibly different) target shardings.
+
+    params_like/opt_like: pytrees of arrays or ShapeDtypeStructs defining
+    the target structure; shardings: matching NamedSharding pytrees (None =>
+    default placement).
+    """
+    p = Path(path)
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    d = p / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    blobs = np.load(d / "tensors.npz")
+
+    def rebuild(tree, prefix, shard_tree):
+        flat_keys = _flatten(tree)
+        shards = _flatten(shard_tree) if shard_tree is not None else {}
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        out = []
+        for (k, like) in flat_keys.items():
+            arr = blobs[f"{prefix}/{k}"]
+            tgt_dtype = getattr(like, "dtype", arr.dtype)
+            arr = arr.astype(tgt_dtype)
+            sh = shards.get(k)
+            out.append(jax.device_put(arr, sh) if sh is not None
+                       else jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    params = rebuild(params_like, "params", shardings)
+    opt = rebuild(opt_like, "opt", opt_shardings) if opt_like is not None else None
+    return params, opt, step, manifest.get("extra", {})

@@ -1,0 +1,11 @@
+import os
+import sys
+from pathlib import Path
+
+# src-layout import without installation
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+# Keep tests on the single real CPU device (the 512-device override is
+# reserved for dryrun.py, which tests exercise via subprocesses).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,162 @@
+"""Multi-device tests (subprocess with forced host devices): sharded train
+step equivalence, MoE shard_map path, checkpoint elastic resharding, and a
+small-scale dry-run including hlo_cost sanity."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _run(code: str, devices: int = 8) -> str:
+    prog = ("import os\n"
+            f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(code))
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=540,
+                       env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+                       cwd=str(ROOT))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.launch.mesh import make_mesh
+    from repro.models.common import AxisRules, init_tree
+    from repro.models.model import build_model
+    from repro.training.optimizer import AdamW, AdamWConfig, make_train_step
+    from repro.training.data import DataConfig, SyntheticLM
+
+    cfg = get_config("qwen3-8b", smoke=True)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=4, seed=0))
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+
+    def losses(mesh):
+        ax = AxisRules(mesh)
+        model = build_model(cfg, ax)
+        params = init_tree(jax.random.PRNGKey(0), model.pds(), jnp.float32)
+        opt = AdamW(AdamWConfig(lr=1e-3, zero1=True), ax)
+        state = opt.init(params)
+        step = make_train_step(model, opt)
+        ls = []
+        if mesh is None:
+            jstep = jax.jit(step)
+            for _ in range(3):
+                params, state, m = jstep(params, state, batch)
+                ls.append(float(m["loss"]))
+        else:
+            with jax.set_mesh(mesh):
+                jstep = jax.jit(step)
+                for _ in range(3):
+                    params, state, m = jstep(params, state, batch)
+                    ls.append(float(m["loss"]))
+        return ls
+
+    l1 = losses(None)
+    l2 = losses(make_mesh((2, 4), ("data", "model")))
+    np.testing.assert_allclose(l1, l2, rtol=5e-3, atol=5e-3)
+    print("OK", l1, l2)
+    """)
+    assert "OK" in out
+
+
+def test_moe_shard_map_matches_single_device():
+    out = _run("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.configs.base import MoEConfig
+    from repro.launch.mesh import make_mesh
+    from repro.models.common import AxisRules, NO_RULES, init_tree
+    from repro.models.moe import moe_apply, moe_pds
+
+    cfg = dataclasses.replace(
+        get_config("mixtral-8x7b", smoke=True),
+        moe=MoEConfig(num_experts=8, top_k=2, expert_d_ff=32,
+                      capacity_factor_train=8.0))  # dropless on both paths
+    p = init_tree(jax.random.PRNGKey(0), moe_pds(cfg), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
+
+    y0, aux0 = jax.jit(lambda p, x: moe_apply(cfg, p, x, NO_RULES, train=True))(p, x)
+
+    mesh = make_mesh((2, 4), ("data", "model"))   # EP: 8 experts / 4 = 2
+    ax = AxisRules(mesh)
+    with jax.set_mesh(mesh):
+        y1, aux1 = jax.jit(lambda p, x: moe_apply(cfg, p, x, ax, train=True))(p, x)
+    # NB: capacity is per token-shard under data parallelism, so dispatch
+    # can differ only when drops occur; this workload has no drops:
+    assert float(aux0["moe_drop_frac"]) == 0.0, aux0
+    assert float(aux1["moe_drop_frac"]) == 0.0, aux1
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               atol=2e-5, rtol=2e-5)
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_checkpoint_elastic_reshard():
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np, tempfile
+    from repro.configs import get_config
+    from repro.launch.mesh import make_mesh
+    from repro.models.common import AxisRules, init_tree, shape_tree
+    from repro.models.model import build_model
+    from repro.training import checkpoint as ckpt
+    from jax.sharding import NamedSharding
+
+    cfg = get_config("yi-9b", smoke=True)
+    mesh_a = make_mesh((8,), ("model",))
+    ax_a = AxisRules(mesh_a)
+    model_a = build_model(cfg, ax_a)
+    params = init_tree(jax.random.PRNGKey(0), model_a.pds(), jnp.float32)
+    shard_a = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh_a, s), ax_a.spec_tree(model_a.pds()))
+    params = jax.device_put(params, shard_a)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, params=params, step=5)
+        # restore onto a DIFFERENT mesh shape (elastic rescale 8 -> 2x4)
+        mesh_b = make_mesh((2, 4), ("data", "model"))
+        ax_b = AxisRules(mesh_b)
+        shard_b = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh_b, s), ax_b.spec_tree(model_a.pds()))
+        like = shape_tree(model_a.pds(), jnp.float32)
+        p2, _, step, _ = ckpt.restore(d, params_like=like, shardings=shard_b)
+        assert step == 5
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_small_scale_dryrun_and_roofline_terms():
+    out = _run("""
+    import jax, json
+    from repro.configs import get_config, SHAPES
+    from repro.configs.base import ShapeConfig
+    from repro.launch.mesh import make_mesh
+    from repro.launch.lowering import build_step, lower_step
+    from repro.launch import hlo_cost
+
+    cfg = get_config("yi-9b", smoke=True)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    shape = ShapeConfig("mini_train", 32, 4, "train")
+    b = build_step(cfg, mesh, shape)
+    comp = lower_step(b, mesh).compile()
+    costs = hlo_cost.analyze(comp.as_text())
+    assert costs["flops"] > 0
+    terms = hlo_cost.roofline_terms(costs, n_chips=8)
+    assert terms["bottleneck"] in ("compute", "memory", "collective")
+    shape_d = ShapeConfig("mini_dec", 64, 4, "decode")
+    b2 = build_step(cfg, mesh, shape_d)
+    comp2 = lower_step(b2, mesh).compile()
+    print("OK", json.dumps(terms))
+    """)
+    assert "OK" in out

@@ -1,0 +1,52 @@
+"""Event-engine determinism + causality properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import SimEngine
+from repro.core.events import EV
+
+
+@given(st.lists(st.floats(min_value=0.0, max_value=100.0, allow_nan=False),
+                min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_events_processed_in_time_order(times):
+    eng = SimEngine()
+    seen = []
+    for t in times:
+        eng.at(t, EV.SCHEDULE_TICK, lambda ev: seen.append(ev.time))
+    eng.run()
+    assert seen == sorted(seen)
+    assert len(seen) == len(times)
+
+
+def test_ties_break_in_schedule_order():
+    eng = SimEngine()
+    seen = []
+    for i in range(50):
+        eng.at(1.0, EV.SCHEDULE_TICK, lambda ev, i=i: seen.append(i))
+    eng.run()
+    assert seen == list(range(50))
+
+
+def test_nested_scheduling_is_causal():
+    eng = SimEngine()
+    log = []
+
+    def spawn(ev):
+        log.append(eng.now)
+        if eng.now < 5:
+            eng.after(1.0, EV.SCHEDULE_TICK, spawn)
+
+    eng.at(0.0, EV.SCHEDULE_TICK, spawn)
+    eng.run()
+    assert log == [float(i) for i in range(6)]
+
+
+def test_run_until_pauses_clock():
+    eng = SimEngine()
+    eng.at(10.0, EV.SCHEDULE_TICK, lambda ev: None)
+    eng.run(until=5.0)
+    assert eng.now == 5.0
+    assert eng.pending == 1
+    eng.run()
+    assert eng.now == 10.0

@@ -1,0 +1,82 @@
+"""The scan-aware HLO cost parser: corrected totals must match unrolled."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def _costs(fn, *args):
+    comp = jax.jit(fn).lower(*args).compile()
+    return hlo_cost.analyze(comp.as_text()), comp
+
+
+def test_scan_flops_match_unrolled():
+    N = 6
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((N, 128, 128), jnp.float32)
+
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+
+    def f_scan(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    def f_unroll(x, ws):
+        for i in range(N):
+            x, _ = body(x, ws[i])
+        return x
+
+    c_scan, comp = _costs(f_scan, x, ws)
+    c_unroll, _ = _costs(f_unroll, x, ws)
+    assert c_scan["flops"] == pytest.approx(c_unroll["flops"], rel=0.01)
+    # raw cost_analysis undercounts the scan (the bug this parser fixes)
+    ca = comp.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    assert ca["flops"] < c_scan["flops"] / (N - 1)
+
+
+def test_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 48), jnp.float32)
+    c, _ = _costs(lambda a, b: a @ b, a, b)
+    assert c["flops"] == pytest.approx(2 * 32 * 64 * 48, rel=1e-6)
+
+
+def test_nested_scan_multiplies_trip_counts():
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+
+    def inner(c, _):
+        return jnp.tanh(c @ c), None
+
+    def outer(c, _):
+        y, _ = jax.lax.scan(inner, c, None, length=3)
+        return y, None
+
+    def f(x):
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    c, _ = _costs(f, x)
+    assert c["flops"] == pytest.approx(12 * 2 * 16 * 16 * 16, rel=0.01)
+
+
+def test_dus_bytes_not_quadratic():
+    """Scan ys-accumulation must be charged per-slice, not per-buffer."""
+    N, D = 64, 256
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            c = jnp.tanh(c)
+            return c, c        # ys: (N, D, D) accumulator
+        _, ys = jax.lax.scan(body, x, None, length=N)
+        return ys
+
+    c, _ = _costs(f, x)
+    buf = N * D * D * 4
+    # in-place model: O(N * slice) == O(buf); quadratic would be N * buf
+    assert c["bytes"] < 8 * buf

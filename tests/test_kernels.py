@@ -1,0 +1,122 @@
+"""Per-kernel allclose vs ref.py oracles, swept over shapes/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def arr(*s, dtype=jnp.float32, scale=0.5):
+    return jnp.asarray(RNG.normal(size=s, scale=scale), dtype)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,T,H,K,hd,causal,window", [
+    (1, 16, 16, 4, 4, 32, True, 0),      # MHA causal
+    (2, 48, 48, 8, 2, 64, True, 0),      # GQA
+    (1, 33, 33, 4, 1, 64, True, 0),      # MQA, ragged seq vs block
+    (2, 32, 32, 4, 2, 64, True, 12),     # sliding window
+    (1, 24, 24, 8, 8, 112, True, 0),     # kimi head_dim 112 (pad path)
+    (1, 16, 16, 4, 4, 32, False, 0),     # bidirectional (encoder)
+])
+def test_flash_attention_matches_ref(B, S, T, H, K, hd, causal, window, dtype):
+    q, k, v = arr(B, S, H, hd, dtype=dtype), arr(B, T, K, hd, dtype=dtype), \
+        arr(B, T, K, hd, dtype=dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=16, bk=16)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,K,hd", [
+    (2, 64, 8, 2, 64),
+    (1, 100, 4, 4, 32),
+    (3, 48, 8, 8, 112),
+])
+def test_decode_attention_matches_ref(B, T, H, K, hd, dtype):
+    q = arr(B, H, hd, dtype=dtype)
+    k, v = arr(B, T, K, hd, dtype=dtype), arr(B, T, K, hd, dtype=dtype)
+    lens = jnp.asarray(RNG.integers(1, T + 1, B), jnp.int32)
+    got = ops.decode_attention(q, k, v, lens, bk=32)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,din,dout", [
+    (2, 32, 64, 64),
+    (5, 40, 96, 128),
+    (1, 16, 128, 256),
+])
+def test_grouped_gemm_matches_ref(E, C, din, dout, dtype):
+    x, w = arr(E, C, din, dtype=dtype), arr(E, din, dout, dtype=dtype)
+    gs = jnp.asarray(RNG.integers(0, C + 1, E), jnp.int32)
+    got = ops.grouped_gemm(x, w, gs, bm=16, bn=64, bkk=32)
+    want = ref.grouped_gemm_ref(x, w, gs)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@given(st.integers(1, 6).flatmap(
+    lambda e: st.tuples(st.just(e),
+                        st.lists(st.integers(0, 24), min_size=e, max_size=e))))
+@settings(max_examples=15, deadline=None)
+def test_grouped_gemm_ragged_property(e_and_sizes):
+    E, sizes = e_and_sizes
+    C = 24
+    x, w = arr(E, C, 32), arr(E, 32, 48)
+    gs = jnp.asarray(sizes, jnp.int32)
+    got = ops.grouped_gemm(x, w, gs, bm=8, bn=48, bkk=32)
+    want = ref.grouped_gemm_ref(x, w, gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # rows beyond group size must be exactly zero
+    for e in range(E):
+        assert np.all(np.asarray(got)[e, sizes[e]:] == 0.0)
+
+
+def test_flash_vs_decode_consistency():
+    """decode(q over cache) == last row of causal flash with same data."""
+    B, T, H, K, hd = 1, 32, 4, 2, 32
+    k, v = arr(B, T, K, hd), arr(B, T, K, hd)
+    q_all = arr(B, T, H, hd)
+    full = ref.flash_attention_ref(q_all, k, v, causal=True)
+    got = ops.decode_attention(q_all[:, -1], k, v,
+                               jnp.asarray([T], jnp.int32), bk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, -1]),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,hs,chunk", [
+    (1, 16, 2, 16, 8),
+    (2, 32, 3, 16, 8),
+    (1, 48, 2, 32, 16),
+])
+def test_wkv_chunk_kernel_matches_sequential_ref(B, T, H, hs, chunk, dtype):
+    r = arr(B, T, H, hs, dtype=dtype)
+    k = arr(B, T, H, hs, dtype=dtype)
+    v = arr(B, T, H, hs, dtype=dtype)
+    # decays in a realistic (0.35, 0.95) band
+    w = jnp.asarray(1 / (1 + np.exp(-RNG.normal(size=(B, T, H, hs))))
+                    * 0.6 + 0.35, dtype)
+    u = arr(H, hs, dtype=dtype, scale=0.3)
+    got = ops.wkv_chunked(r, k, v, w, u, chunk=chunk)
+    want = ref.wkv_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **(dict(atol=5e-2, rtol=5e-2)
+                                  if dtype == jnp.bfloat16
+                                  else dict(atol=5e-5, rtol=5e-5)))

@@ -1,0 +1,86 @@
+"""MoE layer: dispatch correctness vs a dense reference, drop accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import MoEConfig
+from repro.models import NO_RULES, init_tree
+from repro.models.moe import moe_apply, moe_pds, _capacity
+
+
+def _dense_reference(cfg, p, x, *, cf):
+    """Naive per-token loop implementing the same capacity semantics."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    E, k = moe.num_experts, moe.top_k
+    logits = np.asarray(x @ np.asarray(p["router"]), np.float64)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    flat = np.asarray(x, np.float64).reshape(-1, D)
+    T = flat.shape[0]
+    order = np.argsort(-probs.reshape(T, E), axis=1)[:, :k]
+    gates = np.take_along_axis(probs.reshape(T, E), order, 1)
+    gates /= gates.sum(1, keepdims=True)
+    C = _capacity(T, k, E, cf, train=True)
+    used = np.zeros(E, int)
+    y = np.zeros_like(flat)
+    w_in, w_out = np.asarray(p["w_in"], np.float64), np.asarray(p["w_out"], np.float64)
+    w_gate = np.asarray(p.get("w_gate"), np.float64) if "w_gate" in p else None
+    # assignment priority: same as the kernel — flattened (token, slot) order
+    for t in range(T):
+        for j in range(k):
+            e = order[t, j]
+            if used[e] >= C:
+                continue
+            used[e] += 1
+            h = flat[t] @ w_in[e]
+            if w_gate is not None:
+                g = flat[t] @ w_gate[e]
+                h = (g * (1 / (1 + np.exp(-g)))) * h  # silu
+            y[t] += gates[t, j] * (h @ w_out[e])
+    return y.reshape(B, S, D)
+
+
+def _tiny_cfg():
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    return dataclasses.replace(cfg, moe=MoEConfig(num_experts=4, top_k=2,
+                                                  expert_d_ff=32,
+                                                  capacity_factor_train=1.25))
+
+
+def test_moe_matches_dense_reference():
+    cfg = _tiny_cfg()
+    p = init_tree(jax.random.PRNGKey(0), moe_pds(cfg), jnp.float64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.float64)
+    y, aux = moe_apply(cfg, p, x, NO_RULES, train=True)
+    want = _dense_reference(cfg, p, x, cf=cfg.moe.capacity_factor_train)
+    np.testing.assert_allclose(np.asarray(y), want, atol=1e-6, rtol=1e-6)
+
+
+def test_moe_drop_accounting():
+    cfg = _tiny_cfg()
+    p = init_tree(jax.random.PRNGKey(0), moe_pds(cfg), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model))
+    _, aux = moe_apply(cfg, p, x, NO_RULES, train=True)
+    assert 0.0 <= float(aux["moe_drop_frac"]) <= 1.0
+    assert float(aux["moe_lb_loss"]) >= 1.0 - 1e-3   # >= 1 by Cauchy-Schwarz
+
+
+def test_moe_gradients_flow():
+    cfg = _tiny_cfg()
+    p = init_tree(jax.random.PRNGKey(0), moe_pds(cfg), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, cfg.d_model))
+
+    def loss(p):
+        y, aux = moe_apply(cfg, p, x, NO_RULES, train=True)
+        return jnp.sum(y ** 2) + 0.01 * aux["moe_lb_loss"]
+
+    g = jax.grad(loss)(p)
+    gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0
+    # router must receive gradient through the lb loss / gates
+    assert float(jnp.sum(jnp.abs(g["router"]))) > 0

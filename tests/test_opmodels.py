@@ -1,0 +1,94 @@
+"""Operator models: RF quality, proxy comparison, kernelsim properties."""
+import numpy as np
+import pytest
+
+from repro.core.hardware import A800_SXM4_80G, TPU_V5E
+from repro.core.opmodels.calibration import (
+    fit_attention_model, fit_grouped_gemm_model, sample_attention_batch,
+)
+from repro.core.opmodels.features import (
+    attention_features, grouped_gemm_features,
+)
+from repro.core.opmodels.forest import RandomForest
+from repro.core.opmodels.kernelsim import VirtualKernels
+from repro.core.opmodels.vidur_proxy import VidurProxyModel
+
+HW = A800_SXM4_80G
+
+
+def test_forest_fits_nonlinear_function():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(-2, 2, (600, 4))
+    y = np.sin(X[:, 0]) * 3 + X[:, 1] ** 2 + 0.5 * X[:, 2] * X[:, 3]
+    rf = RandomForest(n_trees=12, seed=1).fit(X[:500], y[:500])
+    pred = rf.predict(X[500:])
+    mean_base = np.mean((y[500:] - y[:500].mean()) ** 2)
+    assert np.mean((pred - y[500:]) ** 2) < 0.2 * mean_base
+
+
+def test_forest_deterministic_given_seed():
+    rng = np.random.default_rng(1)
+    X, y = rng.normal(size=(200, 3)), rng.normal(size=200)
+    p1 = RandomForest(n_trees=5, seed=9).fit(X, y).predict(X[:10])
+    p2 = RandomForest(n_trees=5, seed=9).fit(X, y).predict(X[:10])
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_kernelsim_wave_quantization():
+    """Crossing a core-count multiple of tiles must bump runtime."""
+    vk = VirtualKernels(HW)
+    # homogeneous decode: batch tiles = B * kv_heads * kv_split
+    t_under = vk.attention_decode([2048] * 26, 32, 8, 128)   # < 108*2 tiles?
+    t_over = vk.attention_decode([2048] * 28, 32, 8, 128)
+    assert t_over >= t_under
+
+
+def test_kernelsim_monotone_in_work():
+    vk = VirtualKernels(HW)
+    a = vk.attention_prefill([512] * 4, [512] * 4, 32, 8, 128)
+    b = vk.attention_prefill([1024] * 4, [1024] * 4, 32, 8, 128)
+    assert b > a
+    g1 = vk.grouped_gemm([128] * 8, 4096, 14336)
+    g2 = vk.grouped_gemm([256] * 8, 4096, 14336)
+    assert g2 > g1
+
+
+def test_grouped_gemm_imbalance_costs():
+    vk = VirtualKernels(TPU_V5E)
+    balanced = [256] * 8
+    skewed = [2048 - 7 * 8] + [8] * 7   # same total tokens
+    assert vk.grouped_gemm(skewed, 4096, 2048) > \
+        vk.grouped_gemm(balanced, 4096, 2048)
+
+
+def test_rf_beats_vidur_proxy_on_skewed_batches():
+    vk = VirtualKernels(HW)
+
+    def oracle(q, kv, H, K, hd, causal, window):
+        if any(x > 1 for x in q):
+            return vk.attention_prefill(q, kv, H, K, hd, causal=causal,
+                                        window=window)
+        return vk.attention_decode(kv, H, K, hd, window=window)
+
+    model, stats = fit_attention_model(oracle, n_heads=28, n_kv_heads=4,
+                                       head_dim=128, n_samples=300, seed=0)
+    proxy = VidurProxyModel(vk)
+    rng = np.random.default_rng(7)
+    rf_err, px_err = [], []
+    for _ in range(40):
+        q, kv = sample_attention_batch(rng, decode=False)
+        t = oracle(q, kv, 28, 4, 128, True, 0)
+        rf_err.append(abs(model.predict(q, kv, causal=True, window=0) - t) / t)
+        px_err.append(abs(proxy.attention_prefill(q, kv, 28, 4, 128) - t) / t)
+    assert np.mean(rf_err) < np.mean(px_err)
+
+
+def test_feature_extractors_shapes():
+    f = attention_features([4, 4], [128, 2048], 32, 8, 128, causal=True,
+                           window=0)
+    assert f.shape == (16,) and np.isfinite(f).all()
+    g = grouped_gemm_features([0, 10, 300], 1024, 4096)
+    assert g.shape == (11,) and np.isfinite(g).all()
+    # load CV reflects imbalance
+    g_bal = grouped_gemm_features([100, 100, 100], 1024, 4096)
+    assert g[8] > g_bal[8]

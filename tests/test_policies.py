@@ -1,0 +1,69 @@
+"""Property tests for memory/batching policies (system invariants)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies.batching import ChunkedPrefill, ContinuousBatching
+from repro.core.policies.memory import PagedKVManager
+from repro.core.request import Request, RState
+
+
+@given(st.lists(st.tuples(st.sampled_from(["admit", "grow", "free"]),
+                          st.integers(0, 19), st.integers(1, 4096)),
+                min_size=1, max_size=300))
+@settings(max_examples=60, deadline=None)
+def test_paged_kv_block_conservation(ops):
+    mgr = PagedKVManager(total_bytes=1_000_000, kv_bytes_per_token=10,
+                         block_tokens=16, watermark=0.0)
+    total = mgr.total_blocks
+    live = {}
+    for kind, rid, toks in ops:
+        if kind == "admit" and rid not in live:
+            if mgr.admit(rid, toks):
+                live[rid] = toks
+        elif kind == "grow" and rid in live:
+            if mgr.grow(rid, live[rid] + toks):
+                live[rid] += toks
+        elif kind == "free" and rid in live:
+            mgr.free(rid)
+            del live[rid]
+        # invariant: free + held == total, never negative
+        assert 0 <= mgr.free_blocks <= total
+        assert mgr.free_blocks + mgr.held_blocks() == total
+    for rid in list(live):
+        mgr.free(rid)
+    assert mgr.free_blocks == total
+
+
+def _reqs(lens):
+    return [Request(rid=i, arrival=0.0, prompt_len=l, output_len=8)
+            for i, l in enumerate(lens)]
+
+
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=40),
+       st.integers(64, 2048))
+@settings(max_examples=50, deadline=None)
+def test_chunked_prefill_respects_token_budget(lens, budget):
+    pol = ChunkedPrefill(chunk=256, max_batched_tokens=budget)
+    plan = pol.plan(_reqs(lens), [], None, 0.0)
+    assert sum(c for _, c in plan.prefill) <= budget
+    for r, c in plan.prefill:
+        assert 0 < c <= min(256, r.prompt_len)
+
+
+def test_continuous_batching_backpressure():
+    mgr = PagedKVManager(total_bytes=100 * 10 * 16, kv_bytes_per_token=10,
+                         block_tokens=16, watermark=0.0)  # 100 blocks
+    pol = ContinuousBatching(max_batched_tokens=1 << 20)
+    reqs = _reqs([800, 800, 800])       # 50 blocks each
+    plan = pol.plan(reqs, [], mgr, 0.0)
+    assert len(plan.prefill) == 2       # third is backpressured
+    assert mgr.free_blocks == 0
+
+
+def test_request_state_machine_rejects_illegal():
+    r = Request(rid=0, arrival=0.0, prompt_len=4, output_len=4)
+    try:
+        r.to(RState.COMPLETE, 0.0)
+        assert False, "expected ValueError"
+    except ValueError:
+        pass

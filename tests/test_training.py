@@ -1,0 +1,64 @@
+"""Training substrate: loss drop, checkpoint round-trip, resume, data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.train import run
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, SyntheticLM
+
+
+def test_loss_drops_over_training(tmp_path):
+    out = run("yi-9b", smoke=True, steps=30, seq_len=64, global_batch=4,
+              lr=2e-3, log_every=100)
+    assert out["last_loss"] < out["first_loss"] - 0.3
+
+
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    d = str(tmp_path / "ck")
+    out1 = run("qwen3-8b", smoke=True, steps=10, seq_len=32, global_batch=2,
+               ckpt_dir=d, ckpt_every=10, log_every=100, seed=7)
+    assert ckpt.latest_step(d) == 10
+    # a resumed run continues from step 10 deterministically: the combined
+    # trajectory must equal a single 20-step run (same seed/data function)
+    out2 = run("qwen3-8b", smoke=True, steps=10, seq_len=32, global_batch=2,
+               ckpt_dir=d, ckpt_every=0, resume=True, log_every=100, seed=7)
+    out_full = run("qwen3-8b", smoke=True, steps=20, seq_len=32,
+                   global_batch=2, log_every=100, seed=7)
+    np.testing.assert_allclose(out2["last_loss"], out_full["last_loss"],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_checkpoint_atomicity_prunes_tmp(tmp_path):
+    d = tmp_path / "ck2"
+    p = {"w": jnp.ones((4, 4))}
+    ckpt.save(str(d), params=p, step=1)
+    # a stale tmp dir from a "crashed" writer is pruned on the next save
+    stale = d / ".tmp_step_00000009_999"
+    stale.mkdir()
+    ckpt.save(str(d), params=p, step=2)
+    assert not stale.exists()
+    assert ckpt.latest_step(str(d)) == 2
+
+
+def test_data_determinism_and_rank_disjointness():
+    cfg = DataConfig(vocab_size=256, seq_len=16, global_batch=8, seed=3)
+    a, b = SyntheticLM(cfg), SyntheticLM(cfg)
+    x1 = a.batch(5, dp_rank=0, dp_size=2)
+    x2 = b.batch(5, dp_rank=0, dp_size=2)
+    np.testing.assert_array_equal(x1["tokens"], x2["tokens"])
+    y = a.batch(5, dp_rank=1, dp_size=2)
+    assert not np.array_equal(x1["tokens"], y["tokens"])
+    # labels are next-token shifted
+    full = a.batch(9)
+    np.testing.assert_array_equal(full["tokens"][:, 1:], full["labels"][:, :-1])
+
+
+def test_zero1_extends_moment_specs():
+    from repro.models.common import PD
+    from repro.training.optimizer import _zero1_pd
+    pd = PD((64, 32), ("embed", "mlp"))
+    z = _zero1_pd(pd, 16)
+    assert z.axes == ("zero", "mlp")
+    pd2 = PD((10,), (None,))          # not divisible -> unchanged
+    assert _zero1_pd(pd2, 16).axes == (None,)
