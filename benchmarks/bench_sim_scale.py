@@ -4,15 +4,20 @@
   (the practicality argument: exploring an 18k-GPU-hour config space needs
   a fast simulator);
 - Table-1 feature matrix exercised programmatically (PD, AF, PP/TP/DP/EP,
-  pluggable scheduling) — each cell is an actual simulation run.
+  cross-cluster EP, pluggable scheduling) — each cell is an actual
+  simulation run.
+
+``--smoke`` shrinks the workloads for CI (same code paths, seconds not
+minutes).
 """
 from __future__ import annotations
 
+import argparse
 import time
 from typing import List
 
 from repro.configs import get_config
-from repro.core import A800_SXM4_80G, ParallelismConfig
+from repro.core import A800_SXM4_80G, LinkSpec, ParallelismConfig
 from repro.core.policies.batching import ChunkedPrefill, ContinuousBatching
 from repro.core.routing import ZipfRouting
 from repro.core.workflows.af_disagg import build_af
@@ -21,13 +26,14 @@ from repro.core.workflows.pd_disagg import build_pd
 from repro.workload.generator import WorkloadConfig, generate
 
 
-def run() -> List[str]:
+def run(smoke: bool = False) -> List[str]:
     hw = A800_SXM4_80G
     cfg = get_config("qwen2-7b")
     lines = []
 
     # ---- scale: 16-replica cluster, 2000 requests --------------------------
-    wl = WorkloadConfig(n_requests=2000, rate=200.0, prompt_mean=512,
+    n_scale = 200 if smoke else 2000
+    wl = WorkloadConfig(n_requests=n_scale, rate=200.0, prompt_mean=512,
                         output_mean=128, seed=0)
     sys = build_colocated(cfg, hw, n_replicas=16,
                           par=ParallelismConfig(tp=4))
@@ -36,7 +42,7 @@ def run() -> List[str]:
     wall = time.perf_counter() - t0
     ev = sys.engine.processed
     lines.append(
-        f"sim_scale_16replica_2000req,{wall * 1e6 / max(ev, 1):.2f},"
+        f"sim_scale_16replica_{n_scale}req,{wall * 1e6 / max(ev, 1):.2f},"
         f"events={ev};events_per_s={ev / wall:,.0f};"
         f"sim_speedup={rep['duration_s'] / wall:.1f}x;"
         f"completed={rep['n_completed']}")
@@ -51,23 +57,32 @@ def run() -> List[str]:
                                attn_par=ParallelismConfig(tp=2),
                                ffn_par=ParallelismConfig(tp=1, ep=8),
                                routing=ZipfRouting(1.1)),
+        "af_cross_cluster_ep": lambda: build_af(
+            mcfg, hw, m=2,
+            attn_par=ParallelismConfig(tp=2),
+            ffn_par=ParallelismConfig(tp=1, ep=8),
+            remote_expert_ranks=(6, 7),
+            expert_link=LinkSpec("decode", "experts", bandwidth=25e9,
+                                 latency=5e-6),
+            routing=ZipfRouting(1.1)),
         "tp_pp": lambda: build_colocated(cfg, hw,
                                          par=ParallelismConfig(tp=4, pp=2)),
         "dp": lambda: build_colocated(cfg, hw, n_replicas=4),
         "ep": lambda: build_colocated(mcfg, hw,
                                       par=ParallelismConfig(tp=8, ep=8),
-                                      routing=ZipfRouting(1.2)),
+                                      routing="zipf"),
         "sched_chunked_prefill": lambda: build_colocated(
             cfg, hw, policy=ChunkedPrefill(chunk=256)),
         "sched_continuous": lambda: build_colocated(
             cfg, hw, policy=ContinuousBatching()),
     }
+    n_cell = 20 if smoke else 100
     for name, builder in cells.items():
-        wl = WorkloadConfig(n_requests=100, rate=20.0, seed=1)
+        wl = WorkloadConfig(n_requests=n_cell, rate=20.0, seed=1)
         t0 = time.perf_counter()
         rep = builder().run(generate(wl))
         wall = time.perf_counter() - t0
-        ok = rep["n_completed"] == 100
+        ok = rep["n_completed"] == n_cell
         lines.append(
             f"table1_{name},{wall * 1e6:.0f},"
             f"supported={'yes' if ok else 'NO'};"
@@ -77,5 +92,9 @@ def run() -> List[str]:
 
 
 if __name__ == "__main__":
-    for l in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workloads for CI")
+    args = ap.parse_args()
+    for l in run(smoke=args.smoke):
         print(l)

@@ -3,15 +3,19 @@ from repro.core.engine import SimEngine  # noqa: F401
 from repro.core.events import EV, Event  # noqa: F401
 from repro.core.request import Request, RState  # noqa: F401
 from repro.core.hardware import (  # noqa: F401
-    HARDWARE, A800_SXM4_80G, H100_SXM, TPU_V5E, HardwareSpec,
+    HARDWARE, A800_SXM4_80G, H100_SXM, TPU_V5E, HardwareSpec, LinkSpec,
     ParallelismConfig,
 )
 from repro.core.predictor import ExecutionPredictor, StepBreakdown  # noqa: F401
 from repro.core.controller import GlobalController  # noqa: F401
 from repro.core.cluster import ClusterWorker, ReplicaWorker, Hooks  # noqa: F401
 from repro.core.metrics import MetricsCollector, pareto_frontier  # noqa: F401
-from repro.core.workflows.colocated import build_colocated, SystemHandle  # noqa: F401
+from repro.core.topology import (  # noqa: F401
+    ClusterSpec, StageGraph, SystemHandle, build_system,
+)
+from repro.core.routing import ROUTERS, resolve_router  # noqa: F401
+from repro.core.workflows.colocated import build_colocated  # noqa: F401
 from repro.core.workflows.pd_disagg import build_pd  # noqa: F401
 from repro.core.workflows.af_disagg import (  # noqa: F401
-    build_af, simulate_af_decode_step, AFPipelinePredictor,
+    AFStepStats, build_af, simulate_af_decode_step, AFPipelinePredictor,
 )

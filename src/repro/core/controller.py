@@ -12,11 +12,12 @@ Colocated mode degenerates to routing + tracking.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.cluster import ClusterWorker, Hooks, ReplicaWorker
 from repro.core.engine import SimEngine
 from repro.core.events import EV
+from repro.core.hardware import LinkSpec
 from repro.core.metrics import MetricsCollector
 from repro.core.request import Request, RState
 
@@ -27,13 +28,20 @@ class GlobalController:
                  clusters: Dict[str, ClusterWorker],
                  kv_bytes_per_token: float = 0.0,
                  transfer_bw: float = 25e9,
-                 metrics: Optional[MetricsCollector] = None):
+                 metrics: Optional[MetricsCollector] = None,
+                 links: Optional[Dict[Tuple[str, str], LinkSpec]] = None,
+                 entry: Optional[List[str]] = None):
         self.engine = engine
         self.mode = mode
         self.clusters = clusters
         self.kv_bytes_per_token = kv_bytes_per_token
         self.transfer_bw = transfer_bw
         self.metrics = metrics or MetricsCollector()
+        # inter-cluster link table (asymmetric: keyed on (src, dst)); a
+        # missing entry falls back to the flat transfer_bw
+        self.links = links or {}
+        # entry cluster names for arrivals; None -> legacy mode-based lookup
+        self.entry = entry
         self.pending_transfer: List[Request] = []   # PREFILL_COMPLETE queue
         self.prefill_home: Dict[int, ReplicaWorker] = {}
         self.requests: Dict[int, Request] = {}
@@ -55,9 +63,25 @@ class GlobalController:
             self.engine.at(r.arrival, EV.REQUEST_ARRIVAL,
                            lambda ev, r=r: self._arrive(r), rid=r.rid)
 
+    def _entry_clusters(self) -> List[ClusterWorker]:
+        if self.entry:
+            return [self.clusters[n] for n in self.entry]
+        return [self.clusters["prefill" if self.mode == "pd" else "colocated"]]
+
+    def _decode_clusters(self) -> List[ClusterWorker]:
+        return [c for c in self.clusters.values() if c.role == "decode"]
+
     def _arrive(self, r: Request) -> None:
-        cluster = self.clusters["prefill" if self.mode == "pd" else "colocated"]
-        replica = cluster.route(r)
+        # least-loaded healthy replica across all entry clusters
+        candidates = []
+        for cluster in self._entry_clusters():
+            try:
+                candidates.append(cluster.route(r))
+            except RuntimeError:
+                continue
+        if not candidates:
+            raise RuntimeError("no healthy entry replicas")
+        replica = min(candidates, key=lambda w: (w.load(), w.name))
         replica.enqueue_prefill(r)
 
     # -------------------------------------------------- PD stage handoffs --
@@ -74,22 +98,44 @@ class GlobalController:
         if self.mode == "pd" and cluster is not None and cluster.role == "decode":
             self._try_transfers()
 
+    def _transfer_time(self, src: Optional[str], dst: str,
+                       nbytes: float) -> float:
+        link = self.links.get((src, dst)) if src is not None else None
+        if link is not None:
+            return link.transfer_time(nbytes)
+        return nbytes / self.transfer_bw if self.transfer_bw else 0.0
+
     def _try_transfers(self) -> None:
         """Initiate KV transfers for as many queued requests as decode
-        memory allows (system-level backpressure)."""
+        memory allows (system-level backpressure).  With multiple decode
+        pools, the least-loaded pool with free memory wins; the transfer is
+        priced on the (prefill cluster -> decode cluster) link when one is
+        declared, else the flat transfer_bw."""
         if self.mode != "pd":
             return
-        decode = self.clusters["decode"]
+        decode_pools = self._decode_clusters()
         remaining: List[Request] = []
         for r in self.pending_transfer:
-            target = decode.replica_with_memory(r.context_len)
+            target, target_cluster = None, None
+            best_load = None
+            for pool in decode_pools:
+                w = pool.replica_with_memory(r.context_len)
+                if w is None:
+                    continue
+                l = w.load()
+                if best_load is None or l < best_load:
+                    target, target_cluster, best_load = w, pool, l
             if target is None:
                 remaining.append(r)        # backpressured
                 continue
-            assert target.memory.admit(r.rid, r.context_len)
+            admitted = target.memory.admit(r.rid, r.context_len)
+            assert admitted
             r.to(RState.KV_TRANSFER, self.engine.now)
             nbytes = self.kv_bytes_per_token * r.prompt_len
-            dt = nbytes / self.transfer_bw if self.transfer_bw else 0.0
+            src = self.prefill_home.get(r.rid)
+            src_name = src.cluster.name if src is not None and src.cluster \
+                else None
+            dt = self._transfer_time(src_name, target_cluster.name, nbytes)
             self._transfers_in_flight += 1
             self.engine.after(
                 dt, EV.KV_TRANSFER_DONE,

@@ -35,6 +35,10 @@ class EV(enum.Enum):
     A2F_TRANSFER_DONE = "a2f_transfer_done"
     FFN_COMPUTE_DONE = "ffn_compute_done"
     F2A_TRANSFER_DONE = "f2a_transfer_done"
+    # expert-parallel micro-workflow (per-EP-rank dispatch/compute/combine)
+    EXPERT_DISPATCH_DONE = "expert_dispatch_done"
+    EXPERT_RANK_DONE = "expert_rank_done"
+    EXPERT_COMBINE_DONE = "expert_combine_done"
 
 
 _seq = itertools.count()

@@ -64,6 +64,19 @@ HARDWARE = {h.name: h for h in (A800_SXM4_80G, H100_SXM, TPU_V5E)}
 
 
 @dataclass(frozen=True)
+class LinkSpec:
+    """A directed inter-cluster link (asymmetric bandwidths are two links)."""
+    src: str                   # source cluster name
+    dst: str                   # destination cluster name
+    bandwidth: float           # bytes/s
+    latency: float = 0.0       # base latency per transfer (s)
+
+    def transfer_time(self, nbytes: float) -> float:
+        return self.latency + (nbytes / self.bandwidth if self.bandwidth
+                               else 0.0)
+
+
+@dataclass(frozen=True)
 class ParallelismConfig:
     """Per-replica parallelism degrees (a replica = one model instance)."""
     tp: int = 1                # tensor parallel

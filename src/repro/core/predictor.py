@@ -14,8 +14,9 @@ Key paper features implemented here:
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,12 +40,24 @@ class StepBreakdown:
         self.total += t
 
 
+_CACHE_QUANTUM = 1.05   # geometric bucket ratio for memo-cache shape keys
+
+
+def _qtz(x: float) -> int:
+    """Quantize a positive magnitude into ~5% geometric buckets."""
+    if x <= 1:
+        return int(x)
+    return int(round(math.log(x) / math.log(_CACHE_QUANTUM)))
+
+
 class ExecutionPredictor:
     def __init__(self, cfg: ModelConfig, par: ParallelismConfig,
                  hw: HardwareSpec, ops: OperatorModelSet, *,
                  routing: Optional[RoutingModule] = None,
                  engine_overhead: float = 2e-3,
-                 seed: int = 0):
+                 seed: int = 0,
+                 memoize: bool = True,
+                 cache_size: int = 4096):
         self.cfg = cfg
         self.par = par
         self.hw = hw
@@ -52,6 +65,32 @@ class ExecutionPredictor:
         self.routing = routing or BalancedRouting()
         self.engine_overhead = engine_overhead
         self.rng = np.random.default_rng(seed)
+        # step-time memoization: event-graph decode steps are expensive, and
+        # serving batches recur in (quantized) shape — cache on the shape key
+        # so finer-grained simulation does not regress simulator throughput.
+        # Stochastic routers cycle over several cached draws per bucket so
+        # the straggler distribution isn't collapsed to one sample.
+        self._cache: Optional[OrderedDict] = OrderedDict() if memoize else None
+        self._cache_size = cache_size
+        self._cache_variants = 8 if self.routing.stochastic else 1
+        self._bucket_calls: Dict[Tuple, int] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # -------------------------------------------------------------- caching --
+    def _cache_key(self, q_lens: Sequence[int], kv_lens: Sequence[int],
+                   decode: bool) -> Tuple:
+        sq, skv = int(sum(q_lens)), int(sum(kv_lens))
+        mkv = int(max(kv_lens, default=0))
+        base = (decode, len(q_lens), _qtz(sq), _qtz(skv), _qtz(mkv))
+        # rotate stochastic-routing draws per bucket (not per call, which
+        # would alias with periodic prefill/decode interleavings)
+        n = self._bucket_calls.get(base, 0)
+        self._bucket_calls[base] = n + 1
+        return base + (n % self._cache_variants,)
+
+    def _on_cache_hit(self, bd: "StepBreakdown") -> None:
+        """Subclass hook: restore side-band state for a cached step."""
 
     # ------------------------------------------------------------ weights --
     def weight_bytes_per_device(self, dtype_bytes: int = 2) -> float:
@@ -156,7 +195,32 @@ class ExecutionPredictor:
 
         q_lens: new tokens per request (1s for decode; prompt lens/chunks for
         prefill).  kv_lens: context lengths (== q_lens for fresh prefill).
+
+        Results are memoized on a quantized batch-shape key (~5% geometric
+        buckets on token totals): two batches in the same bucket replay the
+        cached breakdown instead of re-walking the operator graph.  With a
+        stochastic router the cache holds 8 rotating draws per bucket, so
+        straggler variance is subsampled, not collapsed; pass
+        ``memoize=False`` for exact per-step sampling.
         """
+        if self._cache is None:
+            return self._step_time_impl(q_lens, kv_lens, decode=decode)
+        key = self._cache_key(q_lens, kv_lens, decode)
+        bd = self._cache.get(key)
+        if bd is not None:
+            self._cache.move_to_end(key)
+            self.cache_hits += 1
+            self._on_cache_hit(bd)
+            return bd
+        self.cache_misses += 1
+        bd = self._step_time_impl(q_lens, kv_lens, decode=decode)
+        self._cache[key] = bd
+        if len(self._cache) > self._cache_size:
+            self._cache.popitem(last=False)
+        return bd
+
+    def _step_time_impl(self, q_lens: Sequence[int], kv_lens: Sequence[int],
+                        *, decode: bool) -> StepBreakdown:
         cfg = self.cfg
         bd = StepBreakdown()
         toks = int(sum(q_lens))

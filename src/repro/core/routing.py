@@ -9,12 +9,17 @@ straggler max() barrier.  Implementations model different imbalance regimes;
 from __future__ import annotations
 
 import math
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
 
 class RoutingModule:
+    #: True when assign() consumes RNG draws — consumers that memoize step
+    #: times use this to keep several samples per shape bucket instead of
+    #: freezing a single draw.
+    stochastic = True
+
     def assign(self, n_tokens: int, n_experts: int, top_k: int,
                rng: np.random.Generator) -> np.ndarray:
         """Return integer token counts per expert, sum == n_tokens * top_k."""
@@ -23,6 +28,8 @@ class RoutingModule:
 
 class BalancedRouting(RoutingModule):
     """Perfectly load-balanced (the idealized lower bound)."""
+
+    stochastic = False
 
     def assign(self, n_tokens, n_experts, top_k, rng):
         total = n_tokens * top_k
@@ -66,13 +73,54 @@ class TraceRouting(RoutingModule):
 
 
 def split_by_rank(counts: np.ndarray, ep: int) -> List[np.ndarray]:
-    """Partition per-expert counts into EP-rank slices (contiguous shards)."""
-    per = len(counts) // ep
-    return [counts[r * per:(r + 1) * per] for r in range(ep)]
+    """Partition per-expert counts into EP-rank slices (contiguous shards).
+
+    When ``n_experts % ep != 0`` the remainder experts are spread across the
+    first ranks (shard sizes differ by at most one) — no expert is dropped.
+    """
+    counts = np.asarray(counts)
+    ep = max(int(ep), 1)
+    base, rem = divmod(len(counts), ep)
+    out: List[np.ndarray] = []
+    off = 0
+    for r in range(ep):
+        n = base + (1 if r < rem else 0)
+        out.append(counts[off:off + n])
+        off += n
+    return out
 
 
 ROUTERS = {
     "balanced": BalancedRouting,
     "uniform": UniformRouting,
     "zipf": ZipfRouting,
+    "trace": TraceRouting,
 }
+
+
+def resolve_router(spec: Union[None, str, RoutingModule],
+                   ) -> Optional[RoutingModule]:
+    """Uniform router argument handling for all builders.
+
+    Accepts an instance (returned as-is), a registered name ("balanced",
+    "uniform", "zipf", ...), or None.  Names construct the router with its
+    default arguments; TraceRouting needs measured fractions, so it can only
+    be passed as an instance.
+    """
+    if spec is None or isinstance(spec, RoutingModule):
+        return spec
+    if isinstance(spec, str):
+        try:
+            cls = ROUTERS[spec]
+        except KeyError:
+            raise KeyError(
+                f"unknown router {spec!r}; registered: {sorted(ROUTERS)}")
+        try:
+            return cls()
+        except TypeError as e:
+            raise TypeError(
+                f"router {spec!r} could not be constructed without "
+                f"arguments ({e}) — pass an instance instead of the name"
+            ) from e
+    raise TypeError(f"routing must be None, a name, or a RoutingModule; "
+                    f"got {type(spec).__name__}")

@@ -2,35 +2,43 @@
 
 One decode step is simulated as an *event dependency graph*: the global
 batch is partitioned into m micro-batches; ATTN_COMPUTE(i,k) runs on the
-attention cluster, A2F_TRANSFER(i,k) ships activations, FFN_COMPUTE(i,k)
-runs on the FFN cluster (optionally MoE/EP), F2A_TRANSFER(i,k) returns.
-The event engine schedules each node as soon as its dependencies are met,
-capturing the ping-pong latency hiding: while A2F(i,k) is in flight the
-attention cluster computes ATTN(i+1,k).  The step time is the timestamp of
-the final FFN/F2A event — the critical path.
+attention cluster, A2F_TRANSFER(i,k) ships activations, the FFN stage runs
+on the FFN cluster, F2A_TRANSFER(i,k) returns.  The event engine schedules
+each node as soon as its dependencies are met, capturing the ping-pong
+latency hiding: while A2F(i,k) is in flight the attention cluster computes
+ATTN(i+1,k).  The step time is the timestamp of the final event — the
+critical path.
+
+Expert parallelism is first-class: an MoE FFN stage is not a scalar max()
+but an explicit per-EP-rank sub-graph per micro-batch —
+
+    gate -> EXPERT_DISPATCH(r) [all-to-all, per rank]
+         -> EXPERT_RANK(r)     [heterogeneous GroupedGEMM per rank]
+         -> barrier            [straggler: last rank gates the combine]
+         -> EXPERT_COMBINE     [all-to-all + shared experts]
+
+Ranks listed in ``remote_ranks`` host their expert shards on a *different
+cluster*: their dispatch/combine legs traverse an inter-cluster LinkSpec
+(lower bandwidth, extra latency) and their GroupedGEMM runs on that
+cluster's operator models (heterogeneous hardware) — the cross-cluster
+expert-routing regime.  Because dispatch and combine are collectives, the
+EP group advances in lockstep: micro-batch i+1's experts start only after
+micro-batch i's combine has completed on every rank.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, ModelConfig
-from repro.core.cluster import ClusterWorker, ReplicaWorker
-from repro.core.controller import GlobalController
 from repro.core.engine import SimEngine
 from repro.core.events import EV
-from repro.core.hardware import HardwareSpec, ParallelismConfig
-from repro.core.metrics import MetricsCollector
+from repro.core.hardware import HardwareSpec, LinkSpec, ParallelismConfig
 from repro.core.opmodels.analytical import OperatorModelSet
-from repro.core.policies.batching import ContinuousBatching
-from repro.core.policies.memory import PagedKVManager
 from repro.core.predictor import ExecutionPredictor, StepBreakdown
 from repro.core.routing import RoutingModule, split_by_rank
-from repro.core.workflows.colocated import SystemHandle, _kv_budget
-from repro.core.workflows.pd_disagg import build_pd
 
 
 @dataclass
@@ -42,6 +50,12 @@ class AFStepStats:
     attn_bubble_frac: float = 0.0
     ffn_bubble_frac: float = 0.0
     events: int = 0
+    # expert-parallel observability (per-EP-rank event graph)
+    ep_dispatch_time: float = 0.0     # sum over stages of the dispatch leg
+    ep_combine_time: float = 0.0      # sum over stages of the combine leg
+    ep_straggler_excess: float = 0.0  # sum of (last rank - mean rank) waits
+    rank_busy: List[float] = field(default_factory=list)  # GEMM time per rank
+    cross_cluster_bytes: float = 0.0  # dispatch+combine bytes on remote link
 
 
 def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
@@ -51,6 +65,9 @@ def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
                             ffn_par: ParallelismConfig,
                             routing: Optional[RoutingModule] = None,
                             rng: Optional[np.random.Generator] = None,
+                            remote_ranks: Sequence[int] = (),
+                            remote_link: Optional[LinkSpec] = None,
+                            remote_ops: Optional[OperatorModelSet] = None,
                             ) -> AFStepStats:
     """Event-dependency-graph simulation of ONE decode step (one token)."""
     rng = rng or np.random.default_rng(0)
@@ -60,6 +77,15 @@ def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
     micro = [c for c in micro if len(c)]
     m_eff = len(micro)
     d = cfg.d_model
+    ep = max(ffn_par.ep, ffn_par.tp, 1) if cfg.moe is not None else 1
+    remote = frozenset(int(r) for r in remote_ranks)
+    if remote and not all(0 <= r < ep for r in remote):
+        raise ValueError(f"remote_ranks {sorted(remote)} out of range for "
+                         f"ep={ep}")
+    if remote and remote_link is None:
+        raise ValueError("remote_ranks given without a remote_link — the "
+                         "cross-cluster legs would not be modeled")
+    r_ops = remote_ops or ops
 
     # ---- per-(microbatch, layer) task durations --------------------------
     def t_attn(lens: List[int], kind: str) -> float:
@@ -73,40 +99,23 @@ def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
         t += ops.all_reduce(2.0 * len(lens) * d, tp)
         return t
 
-    def t_ffn(n_tok: int) -> float:
+    def t_ffn_dense(n_tok: int) -> float:
         n_mats = 3 if cfg.gated_mlp else 2
-        if cfg.moe is None:
-            tp = max(ffn_par.tp, 1)
-            return (n_mats * ops.gemm(n_tok, cfg.d_ff // tp, d)
-                    + ops.all_reduce(2.0 * n_tok * d, tp))
-        moe = cfg.moe
-        ep = max(ffn_par.ep, ffn_par.tp, 1)
-        t = ops.gemm(n_tok, moe.num_experts, d)
-        counts = (routing.assign(n_tok, moe.num_experts, moe.top_k, rng)
-                  if routing is not None else
-                  np.full(moe.num_experts, n_tok * moe.top_k // moe.num_experts))
-        per_rank = split_by_rank(np.asarray(counts), ep)
-        times = [n_mats * ops.grouped_gemm(list(rc), d, moe.expert_d_ff)
-                 for rc in per_rank]
-        t += max(times) if times else 0.0
-        if moe.num_shared_experts:
-            t += n_mats * ops.gemm(n_tok, moe.expert_d_ff * moe.num_shared_experts, d)
-        return t
+        tp = max(ffn_par.tp, 1)
+        return (n_mats * ops.gemm(n_tok, cfg.d_ff // tp, d)
+                + ops.all_reduce(2.0 * n_tok * d, tp))
 
     def t_xfer(n_tok: int) -> float:
         return ops.p2p(2.0 * n_tok * d, inter_node=True)
 
     attn_kinds = [k for k in cfg.pattern]
     stats = AFStepStats()
+    stats.rank_busy = [0.0] * ep
 
     # ---- resources & dependency-driven scheduling -------------------------
-    attn_free = [0.0]   # next-available times (single pipeline per cluster)
-    ffn_free = [0.0]
+    attn_free = [0.0]    # attention cluster: single pipeline
+    ffn_free = [0.0]     # FFN/EP group: lockstep (collectives barrier it)
     done_f2a = {i: 0.0 for i in range(m_eff)}  # F2A(i, k-1) completion
-
-    # we iterate layers in order; within a layer, micro-batches are admitted
-    # in index order — the event engine resolves the interleaving.
-    pending = {}
 
     def schedule_attn(i: int, k: int, ev=None):
         kind = attn_kinds[k]
@@ -128,11 +137,72 @@ def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
                lambda ev: schedule_ffn(i, k), i=i, k=k)
 
     def schedule_ffn(i: int, k: int):
-        dur = t_ffn(len(micro[i]))
-        start = max(eng.now, ffn_free[0])
-        ffn_free[0] = start + dur
-        stats.ffn_busy += dur
-        eng.at(start + dur, EV.FFN_COMPUTE_DONE,
+        if cfg.moe is None:
+            dur = t_ffn_dense(len(micro[i]))
+            start = max(eng.now, ffn_free[0])
+            ffn_free[0] = start + dur
+            stats.ffn_busy += dur
+            eng.at(start + dur, EV.FFN_COMPUTE_DONE,
+                   lambda ev: schedule_f2a(i, k), i=i, k=k)
+        else:
+            schedule_experts(i, k)
+
+    # ---- the per-EP-rank expert sub-graph ---------------------------------
+    moe = cfg.moe
+
+    def schedule_experts(i: int, k: int):
+        n_tok = len(micro[i])
+        n_mats = 3 if cfg.gated_mlp else 2
+        t0 = max(eng.now, ffn_free[0])
+        t_gate = ops.gemm(n_tok, moe.num_experts, d)
+        counts = (routing.assign(n_tok, moe.num_experts, moe.top_k, rng)
+                  if routing is not None else
+                  np.full(moe.num_experts,
+                          n_tok * moe.top_k // moe.num_experts))
+        per_rank = split_by_rank(np.asarray(counts), ep)
+        a2a_base = ops.all_to_all(2.0 * n_tok * moe.top_k * d / ep, ep)
+
+        # per-rank leg time (one dispatch or combine collective into/out of
+        # rank r) and the bytes that cross the inter-cluster link doing it
+        legs: List[float] = []
+        for r in range(ep):
+            if r not in remote or remote_link is None:
+                legs.append(a2a_base)
+            else:
+                nbytes = 2.0 * float(np.sum(per_rank[r])) * d
+                # dispatch + combine each traverse the link once
+                stats.cross_cluster_bytes += 2.0 * nbytes
+                legs.append(a2a_base + remote_link.transfer_time(nbytes))
+
+        # dispatch and combine are collectives: the group advances in
+        # lockstep, so the whole stage timeline is fixed once the dispatch
+        # starts — compute it, reserve the group through the combine, and
+        # emit the per-rank events at their true timestamps.
+        finish: List[float] = []
+        for r in range(ep):
+            rops = r_ops if r in remote else ops
+            dur = n_mats * rops.grouped_gemm(list(per_rank[r]), d,
+                                             moe.expert_d_ff)
+            stats.rank_busy[r] += dur
+            t_ready = t0 + t_gate + legs[r]
+            finish.append(t_ready + dur)
+            eng.at(t_ready, EV.EXPERT_DISPATCH_DONE, None, i=i, k=k, r=r)
+            eng.at(t_ready + dur, EV.EXPERT_RANK_DONE, None, i=i, k=k, r=r)
+        barrier = max(finish)
+        stats.ep_straggler_excess += barrier - sum(finish) / len(finish)
+        stats.ep_dispatch_time += max(legs)
+        t_comb = max(legs)
+        t_shared = 0.0
+        if moe.num_shared_experts:
+            t_shared = n_mats * ops.gemm(
+                n_tok, moe.expert_d_ff * moe.num_shared_experts, d)
+        end = barrier + t_comb + t_shared
+        # combine leg + the serial shared-expert tail (dispatch_time covers
+        # only the inbound collective, so the two fields stay distinct)
+        stats.ep_combine_time += t_comb + t_shared
+        ffn_free[0] = end
+        stats.ffn_busy += end - t0
+        eng.at(end, EV.EXPERT_COMBINE_DONE,
                lambda ev: schedule_f2a(i, k), i=i, k=k)
 
     def schedule_f2a(i: int, k: int):
@@ -162,26 +232,41 @@ class AFPipelinePredictor(ExecutionPredictor):
 
     def __init__(self, *args, m: int = 2,
                  attn_par: Optional[ParallelismConfig] = None,
-                 ffn_par: Optional[ParallelismConfig] = None, **kw):
+                 ffn_par: Optional[ParallelismConfig] = None,
+                 remote_ranks: Sequence[int] = (),
+                 remote_link: Optional[LinkSpec] = None,
+                 remote_ops: Optional[OperatorModelSet] = None, **kw):
         super().__init__(*args, **kw)
         self.m = m
         self.attn_par = attn_par or self.par
         self.ffn_par = ffn_par or self.par
+        self.remote_ranks = tuple(remote_ranks)
+        self.remote_link = remote_link
+        self.remote_ops = remote_ops
         self.last_stats: Optional[AFStepStats] = None
 
-    def step_time(self, q_lens, kv_lens, *, decode: bool) -> StepBreakdown:
+    def _on_cache_hit(self, bd: StepBreakdown) -> None:
+        # cached prefill steps carry no AF stats; keep the last decode stats
+        if hasattr(bd, "af_stats"):
+            self.last_stats = bd.af_stats
+
+    def _step_time_impl(self, q_lens, kv_lens, *, decode: bool) -> StepBreakdown:
         if not decode:
-            return super().step_time(q_lens, kv_lens, decode=False)
+            return super()._step_time_impl(q_lens, kv_lens, decode=False)
         stats = simulate_af_decode_step(
             self.cfg, self.hw, self.ops, list(kv_lens), m=self.m,
             attn_par=self.attn_par, ffn_par=self.ffn_par,
-            routing=self.routing, rng=self.rng)
+            routing=self.routing, rng=self.rng,
+            remote_ranks=self.remote_ranks, remote_link=self.remote_link,
+            remote_ops=self.remote_ops)
         self.last_stats = stats
         bd = StepBreakdown()
         bd.add("af_pipeline", stats.makespan)
         bd.add("engine_overhead", self.engine_overhead)
         bd.parts["attn_bubble_frac"] = stats.attn_bubble_frac
         bd.parts["ffn_bubble_frac"] = stats.ffn_bubble_frac
+        bd.parts["ep_straggler_excess"] = stats.ep_straggler_excess
+        bd.af_stats = stats
         return bd
 
 
@@ -191,46 +276,30 @@ def build_af(cfg: ModelConfig, hw: HardwareSpec, *,
              ffn_par: Optional[ParallelismConfig] = None,
              prefill_par: Optional[ParallelismConfig] = None,
              ops: Optional[OperatorModelSet] = None,
-             routing=None, seed: int = 0) -> SystemHandle:
-    """PD front + AF-disaggregated decode (as deployed by MegaScale-Infer)."""
-    engine = SimEngine()
-    ops = ops or OperatorModelSet(hw)
+             routing=None, seed: int = 0,
+             expert_cluster_hw: Optional[HardwareSpec] = None,
+             remote_expert_ranks: Sequence[int] = (),
+             expert_link: Optional[LinkSpec] = None,
+             memoize: bool = True):
+    """PD front + AF-disaggregated decode (as deployed by MegaScale-Infer).
+
+    Preset over :func:`repro.core.topology.build_system`.  Pass
+    ``remote_expert_ranks`` (+ optionally ``expert_cluster_hw`` /
+    ``expert_link``) to place some EP ranks on a separate expert cluster
+    reached over an inter-cluster link (cross-cluster expert routing).
+    """
+    from repro.core.topology import ClusterSpec, StageGraph, build_system
     attn_par = attn_par or ParallelismConfig(tp=1)
     ffn_par = ffn_par or ParallelismConfig(tp=1, ep=1)
     prefill_par = prefill_par or ParallelismConfig(tp=1)
-    metrics = MetricsCollector()
-
-    pred0 = ExecutionPredictor(cfg, attn_par, hw, ops)
-    controller = GlobalController(
-        engine, mode="pd", clusters={},
-        kv_bytes_per_token=pred0.kv_bytes_per_token(),
-        transfer_bw=hw.inter_node_bw, metrics=metrics)
-    hooks = controller.hooks()
-
-    pre = []
-    for i in range(n_prefill):
-        p = ExecutionPredictor(cfg, prefill_par, hw, ops, routing=routing,
-                               seed=seed + i)
-        mem = PagedKVManager(_kv_budget(cfg, hw, prefill_par, p),
-                             p.kv_bytes_per_token())
-        pre.append(ReplicaWorker(engine, f"prefill{i}", p,
-                                 ContinuousBatching(max_batched_tokens=16384),
-                                 mem, hooks, role="prefill"))
-    dec = []
-    for i in range(n_decode):
-        p = AFPipelinePredictor(cfg, attn_par, hw, ops, routing=routing,
-                                seed=seed + 50 + i, m=m,
-                                attn_par=attn_par, ffn_par=ffn_par)
-        mem = PagedKVManager(_kv_budget(cfg, hw, attn_par, p),
-                             p.kv_bytes_per_token())
-        dec.append(ReplicaWorker(engine, f"af-decode{i}", p,
-                                 ContinuousBatching(max_num_seqs=512),
-                                 mem, hooks, role="decode"))
-
-    prefill = ClusterWorker("prefill", "prefill", pre)
-    decode = ClusterWorker("decode", "decode", dec)
-    controller.clusters.update({"prefill": prefill, "decode": decode})
-    n_dev = (n_prefill * prefill_par.devices
-             + n_decode * (attn_par.devices + ffn_par.devices))
-    return SystemHandle(engine, controller,
-                        {"prefill": prefill, "decode": decode}, n_dev)
+    graph = StageGraph(clusters=[
+        ClusterSpec("prefill", "prefill", n_replicas=n_prefill,
+                    par=prefill_par, seed_offset=0, memoize=memoize),
+        ClusterSpec("decode", "decode", n_replicas=n_decode,
+                    par=attn_par, step="af", m=m,
+                    attn_par=attn_par, ffn_par=ffn_par, seed_offset=50,
+                    expert_cluster_hw=expert_cluster_hw,
+                    remote_expert_ranks=tuple(remote_expert_ranks),
+                    expert_link=expert_link, memoize=memoize),
+    ])
+    return build_system(cfg, hw, graph, ops=ops, routing=routing, seed=seed)

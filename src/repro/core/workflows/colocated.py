@@ -1,42 +1,21 @@
-"""Colocated serving system (the traditional deployment baseline)."""
+"""Colocated serving system (the traditional deployment baseline).
+
+A thin preset over the StageGraph topology layer: one cluster, role
+"colocated".  SystemHandle/_kv_budget live in repro.core.topology and are
+re-exported here for backward compatibility.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional
+from typing import Optional
 
 from repro.configs.base import ModelConfig
-from repro.core.cluster import ClusterWorker, ReplicaWorker
-from repro.core.controller import GlobalController
 from repro.core.engine import SimEngine
 from repro.core.hardware import HardwareSpec, ParallelismConfig
-from repro.core.metrics import MetricsCollector
 from repro.core.opmodels.analytical import OperatorModelSet
-from repro.core.policies.batching import BatchingPolicy, ContinuousBatching
-from repro.core.policies.memory import PagedKVManager
-from repro.core.predictor import ExecutionPredictor
-from repro.core.request import Request
-
-
-@dataclass
-class SystemHandle:
-    engine: SimEngine
-    controller: GlobalController
-    clusters: dict
-    n_devices: int
-
-    def run(self, requests: List[Request], until: float = float("inf")):
-        self.controller.metrics.start = 0.0
-        self.controller.submit_all(requests)
-        self.engine.run(until)
-        return self.controller.metrics.report(n_devices=self.n_devices)
-
-
-def _kv_budget(cfg: ModelConfig, hw: HardwareSpec, par: ParallelismConfig,
-               pred: ExecutionPredictor, frac: float = 0.9) -> float:
-    """KV memory per replica = devices*(HBM - weights) * frac."""
-    total = hw.hbm_capacity * par.devices
-    weights = 2.0 * cfg.param_count()
-    return max((total - weights) * frac, hw.hbm_capacity * 0.05)
+from repro.core.policies.batching import BatchingPolicy
+from repro.core.topology import (  # noqa: F401  (re-exports)
+    ClusterSpec, StageGraph, SystemHandle, _kv_budget, build_system,
+)
 
 
 def build_colocated(cfg: ModelConfig, hw: HardwareSpec, *,
@@ -45,24 +24,12 @@ def build_colocated(cfg: ModelConfig, hw: HardwareSpec, *,
                     policy: Optional[BatchingPolicy] = None,
                     ops: Optional[OperatorModelSet] = None,
                     engine: Optional[SimEngine] = None,
-                    routing=None, seed: int = 0) -> SystemHandle:
-    engine = engine or SimEngine()
-    par = par or ParallelismConfig(tp=1)
-    ops = ops or OperatorModelSet(hw)
-    metrics = MetricsCollector()
-    controller = GlobalController(engine, mode="colocated", clusters={},
-                                  metrics=metrics)
-    hooks = controller.hooks()
-    replicas = []
-    for i in range(n_replicas):
-        pred = ExecutionPredictor(cfg, par, hw, ops, routing=routing,
-                                  seed=seed + i)
-        mem = PagedKVManager(_kv_budget(cfg, hw, par, pred),
-                             pred.kv_bytes_per_token())
-        replicas.append(ReplicaWorker(
-            engine, f"colo{i}", pred,
-            policy or ContinuousBatching(), mem, hooks, role="colocated"))
-    cluster = ClusterWorker("colocated", "colocated", replicas)
-    controller.clusters["colocated"] = cluster
-    return SystemHandle(engine, controller, {"colocated": cluster},
-                        n_devices=n_replicas * par.devices)
+                    routing=None, seed: int = 0,
+                    memoize: bool = True) -> SystemHandle:
+    graph = StageGraph(clusters=[
+        ClusterSpec("colocated", "colocated", n_replicas=n_replicas,
+                    par=par or ParallelismConfig(tp=1), policy=policy,
+                    replica_prefix="colo", memoize=memoize),
+    ])
+    return build_system(cfg, hw, graph, ops=ops, routing=routing,
+                        engine=engine, seed=seed)

@@ -2,25 +2,20 @@
 
 Producer (prefill cluster) and consumer (decode cluster) are specialized
 pools with independent parallelism; the GlobalController mediates KV-cache
-transfers under decode-side memory backpressure.
+transfers under decode-side memory backpressure.  A thin preset over the
+StageGraph topology layer.
 """
 from __future__ import annotations
 
 from typing import Optional
 
 from repro.configs.base import ModelConfig
-from repro.core.cluster import ClusterWorker, ReplicaWorker
-from repro.core.controller import GlobalController
-from repro.core.engine import SimEngine
 from repro.core.hardware import HardwareSpec, ParallelismConfig
-from repro.core.metrics import MetricsCollector
 from repro.core.opmodels.analytical import OperatorModelSet
-from repro.core.policies.batching import (
-    BatchingPolicy, ContinuousBatching,
+from repro.core.policies.batching import BatchingPolicy
+from repro.core.topology import (
+    ClusterSpec, StageGraph, SystemHandle, build_system,
 )
-from repro.core.policies.memory import PagedKVManager
-from repro.core.predictor import ExecutionPredictor
-from repro.core.workflows.colocated import SystemHandle, _kv_budget
 
 
 def build_pd(cfg: ModelConfig, hw: HardwareSpec, *,
@@ -31,46 +26,15 @@ def build_pd(cfg: ModelConfig, hw: HardwareSpec, *,
              decode_policy: Optional[BatchingPolicy] = None,
              ops: Optional[OperatorModelSet] = None,
              transfer_bw: Optional[float] = None,
-             routing=None, seed: int = 0) -> SystemHandle:
-    engine = SimEngine()
-    prefill_par = prefill_par or ParallelismConfig(tp=1)
-    decode_par = decode_par or ParallelismConfig(tp=1)
-    ops = ops or OperatorModelSet(hw)
-    metrics = MetricsCollector()
-
-    pred0 = ExecutionPredictor(cfg, prefill_par, hw, ops, routing=routing)
-    controller = GlobalController(
-        engine, mode="pd", clusters={},
-        kv_bytes_per_token=pred0.kv_bytes_per_token(),
-        transfer_bw=transfer_bw if transfer_bw is not None else hw.inter_node_bw,
-        metrics=metrics)
-    hooks = controller.hooks()
-
-    pre_replicas = []
-    for i in range(n_prefill):
-        pred = ExecutionPredictor(cfg, prefill_par, hw, ops, routing=routing,
-                                  seed=seed + i)
-        # prefill buffer holds produced KV until the pull-based transfer
-        mem = PagedKVManager(_kv_budget(cfg, hw, prefill_par, pred),
-                             pred.kv_bytes_per_token())
-        pre_replicas.append(ReplicaWorker(
-            engine, f"prefill{i}", pred,
-            prefill_policy or ContinuousBatching(max_batched_tokens=16384),
-            mem, hooks, role="prefill"))
-    dec_replicas = []
-    for i in range(n_decode):
-        pred = ExecutionPredictor(cfg, decode_par, hw, ops, routing=routing,
-                                  seed=seed + 100 + i)
-        mem = PagedKVManager(_kv_budget(cfg, hw, decode_par, pred),
-                             pred.kv_bytes_per_token())
-        dec_replicas.append(ReplicaWorker(
-            engine, f"decode{i}", pred,
-            decode_policy or ContinuousBatching(max_num_seqs=512),
-            mem, hooks, role="decode"))
-
-    prefill = ClusterWorker("prefill", "prefill", pre_replicas)
-    decode = ClusterWorker("decode", "decode", dec_replicas)
-    controller.clusters.update({"prefill": prefill, "decode": decode})
-    n_dev = n_prefill * prefill_par.devices + n_decode * decode_par.devices
-    return SystemHandle(engine, controller,
-                        {"prefill": prefill, "decode": decode}, n_dev)
+             routing=None, seed: int = 0,
+             memoize: bool = True) -> SystemHandle:
+    graph = StageGraph(clusters=[
+        ClusterSpec("prefill", "prefill", n_replicas=n_prefill,
+                    par=prefill_par or ParallelismConfig(tp=1),
+                    policy=prefill_policy, seed_offset=0, memoize=memoize),
+        ClusterSpec("decode", "decode", n_replicas=n_decode,
+                    par=decode_par or ParallelismConfig(tp=1),
+                    policy=decode_policy, seed_offset=100, memoize=memoize),
+    ])
+    return build_system(cfg, hw, graph, ops=ops, routing=routing,
+                        transfer_bw=transfer_bw, seed=seed)

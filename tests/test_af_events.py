@@ -1,0 +1,120 @@
+"""AF event-graph properties: per-EP-rank dispatch/compute/combine events,
+straggler behaviour, determinism, and cross-cluster expert routing."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    A800_SXM4_80G, H100_SXM, LinkSpec, ParallelismConfig,
+    simulate_af_decode_step,
+)
+from repro.core.opmodels.analytical import OperatorModelSet
+from repro.core.routing import BalancedRouting, ZipfRouting
+
+HW = A800_SXM4_80G
+MCFG = get_config("mixtral-8x7b")
+OPS = OperatorModelSet(HW)
+LENS = [512] * 64
+
+
+def _step(**kw):
+    args = dict(m=2, attn_par=ParallelismConfig(tp=2),
+                ffn_par=ParallelismConfig(tp=1, ep=4),
+                routing=BalancedRouting(),
+                rng=np.random.default_rng(0))
+    args.update(kw)
+    return simulate_af_decode_step(MCFG, HW, OPS, LENS, **args)
+
+
+def test_makespan_bounded_by_serialized_sum():
+    st = _step()
+    serial = (st.attn_busy + st.ffn_busy
+              + st.transfer_bytes / HW.inter_node_bw
+              + 4 * MCFG.num_layers * HW.op_overhead + 1e-6)
+    assert st.makespan <= serial
+    assert st.makespan >= max(st.attn_busy, st.ffn_busy) - 1e-9
+
+
+def test_bubble_fractions_in_unit_interval():
+    for m in (1, 2, 4):
+        st = _step(m=m)
+        assert 0.0 <= st.attn_bubble_frac <= 1.0
+        assert 0.0 <= st.ffn_bubble_frac <= 1.0
+
+
+def test_bit_identical_across_repeated_runs_same_seed():
+    runs = [_step(routing=ZipfRouting(1.3), rng=np.random.default_rng(7))
+            for _ in range(3)]
+    for st in runs[1:]:
+        assert st.makespan == runs[0].makespan
+        assert st.ep_straggler_excess == runs[0].ep_straggler_excess
+        assert st.rank_busy == runs[0].rank_busy
+        assert st.events == runs[0].events
+
+
+def test_per_rank_events_are_emitted():
+    """Every (microbatch, layer) MoE stage emits per-rank dispatch +
+    compute events and one combine — the EP graph is really simulated."""
+    ep = 4
+    st = _step(m=1, ffn_par=ParallelismConfig(tp=1, ep=ep))
+    n_stages = MCFG.num_layers  # m=1 -> one stage per layer
+    # attn + a2f + f2a per stage, plus 2*ep + 1 expert events per stage
+    assert st.events >= n_stages * (2 * ep + 1)
+    assert len(st.rank_busy) == ep
+    assert all(b > 0 for b in st.rank_busy)
+
+
+def test_ep_straggler_monotone_under_zipf_skew():
+    """More skew -> more straggler excess (and balanced ~ zero)."""
+    excess = {}
+    for name, router in (("bal", BalancedRouting()),
+                         ("z_mild", ZipfRouting(0.6)),
+                         ("z_heavy", ZipfRouting(1.6))):
+        sts = [
+            simulate_af_decode_step(
+                MCFG, HW, OPS, LENS, m=2,
+                attn_par=ParallelismConfig(tp=2),
+                ffn_par=ParallelismConfig(tp=1, ep=4),
+                routing=router, rng=np.random.default_rng(s))
+            for s in range(5)
+        ]
+        excess[name] = np.mean([s.ep_straggler_excess for s in sts])
+    assert excess["bal"] <= excess["z_mild"] + 1e-12
+    assert excess["z_mild"] < excess["z_heavy"]
+
+
+def test_zipf_skew_inflates_makespan():
+    bal = _step(rng=np.random.default_rng(1))
+    zipf = _step(routing=ZipfRouting(1.6), rng=np.random.default_rng(1))
+    assert zipf.makespan > bal.makespan
+    assert zipf.ep_straggler_excess > bal.ep_straggler_excess
+
+
+def test_cross_cluster_expert_ranks_slow_the_barrier():
+    """Remote EP ranks pay the inter-cluster link on dispatch+combine, so
+    the straggler barrier (and the makespan) must grow."""
+    link = LinkSpec("decode", "experts", bandwidth=5e9, latency=20e-6)
+    local = _step()
+    xc = _step(remote_ranks=(2, 3), remote_link=link)
+    assert xc.makespan > local.makespan
+    assert xc.cross_cluster_bytes > 0
+    assert local.cross_cluster_bytes == 0
+
+
+def test_remote_rank_misconfiguration_raises():
+    link = LinkSpec("decode", "experts", bandwidth=25e9)
+    with pytest.raises(ValueError, match="out of range"):
+        _step(remote_ranks=(9,), remote_link=link)   # ep=4
+    with pytest.raises(ValueError, match="without a remote_link"):
+        _step(remote_ranks=(1,))
+
+
+def test_cross_cluster_heterogeneous_expert_hardware():
+    """Remote ranks on faster hardware shrink their GEMM time (visible in
+    rank_busy) even though the link still gates dispatch/combine."""
+    link = LinkSpec("decode", "experts", bandwidth=200e9)
+    slow = _step(remote_ranks=(0, 1), remote_link=link)
+    fast = _step(remote_ranks=(0, 1), remote_link=link,
+                 remote_ops=OperatorModelSet(H100_SXM))
+    assert fast.rank_busy[0] < slow.rank_busy[0]
+    assert fast.rank_busy[3] == pytest.approx(slow.rank_busy[3])

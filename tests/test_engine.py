@@ -1,5 +1,8 @@
 """Event-engine determinism + causality properties."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.engine import SimEngine

@@ -1,5 +1,8 @@
 """Property tests for memory/batching policies (system invariants)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.policies.batching import ChunkedPrefill, ContinuousBatching
