@@ -13,13 +13,12 @@ from typing import List
 
 import numpy as np
 
+from repro.api import ModelRef, SimSpec, TopologySpec, WorkloadSpec
+from repro.api.run import run as run_spec
 from repro.configs import get_config
-from repro.core.hardware import ParallelismConfig
 from repro.core.opmodels.analytical import OperatorModelSet
 from repro.core.opmodels.calibration import measure_cpu_hardware
-from repro.core.workflows.colocated import build_colocated
 from repro.serving.engine import MiniEngine
-from repro.workload.generator import fixed_batch
 
 # Table-2 grid (scaled to CPU/smoke sizes; same structure as the paper's)
 GRID = [
@@ -57,19 +56,26 @@ def run(seed: int = 0) -> List[str]:
         eng.submit(list(prompts), o_len)
         measured = eng.run()          # steady state
 
-        ops = OperatorModelSet(hw)
-        # memoize=False: this benchmark measures predictor accuracy, so the
-        # ~5%-bucket step-time cache must not quantize the predictions
-        sim = build_colocated(cfg, hw, n_replicas=1,
-                              par=ParallelismConfig(tp=1), ops=ops,
-                              memoize=False)
+        # the simulated system as a declarative spec; the measured-CPU
+        # hardware/operator models are injected (calibration flow), and
+        # memoize=False because this benchmark measures predictor accuracy
+        # — the ~5%-bucket step-time cache must not quantize predictions
+        spec = SimSpec(
+            name=f"table2_b{batch}_in{p_len}_out{o_len}",
+            model=ModelRef("qwen2-7b", smoke=True),
+            topology=TopologySpec(preset="colocated", n_replicas=1, tp=1,
+                                  memoize=False),
+            workload=WorkloadSpec(n_requests=batch, arrival="burst",
+                                  burst_size=batch, prompt="fixed",
+                                  prompt_mean=p_len, output="fixed",
+                                  output_mean=o_len),
+            seed=seed)
         # calibrated per-step floor: the steady-state decode step measured
         # on this host (paper flow: operator/engine profiles from the same
         # hardware feed the predictor)
         floor = min(s["dur"] for s in eng.step_log if s["kind"] == "decode")
-        for rep_w in sim.clusters["colocated"].replicas:
-            rep_w.predictor.engine_overhead = max(floor, dispatch * 8)
-        predicted = sim.run(fixed_batch(batch, p_len, o_len))
+        predicted = run_spec(spec, hardware=hw, ops=OperatorModelSet(hw),
+                             engine_overhead=max(floor, dispatch * 8))
 
         m, p = measured["throughput_tok_s"], predicted["throughput_tok_s"]
         err = abs(p - m) / m

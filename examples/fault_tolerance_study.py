@@ -1,41 +1,46 @@
 """Case study: replica failures and stragglers in a serving cluster.
 
-Demonstrates the large-scale-operations machinery: inject a replica
-failure (lost KV, re-routing, recovery) and a chronic straggler replica,
-and quantify their throughput/latency cost — the kind of what-if a fleet
-operator runs in Frontier before changing production.
+Demonstrates the large-scale-operations machinery through the experiment
+API: failure injection is data — a `FaultSpec` list on the `SimSpec` — so
+the three what-if cases differ only in their fault lists and could equally
+be three YAML files run by `python -m repro run`.
 
     PYTHONPATH=src python examples/fault_tolerance_study.py
 """
-from repro.configs import get_config
-from repro.core import A800_SXM4_80G, ParallelismConfig
-from repro.core.workflows.colocated import build_colocated
-from repro.workload.generator import WorkloadConfig, generate
+from repro.api import (FaultSpec, ModelRef, SimSpec, TopologySpec,
+                       WorkloadSpec, run)
 
+BASE = SimSpec(
+    model=ModelRef("qwen2-7b"),
+    topology=TopologySpec(preset="colocated", n_replicas=4, tp=1),
+    workload=WorkloadSpec(n_requests=300, rate=40.0, prompt_mean=512,
+                          output_mean=96),
+    seed=0)
 
-def run_case(name, *, fail=False, straggler=False):
-    cfg = get_config("qwen2-7b")
-    hw = A800_SXM4_80G
-    sys = build_colocated(cfg, hw, n_replicas=4, par=ParallelismConfig(tp=1))
-    if straggler:
-        sys.clusters["colocated"].replicas[1].slowdown = 3.0
-    if fail:
-        # replica 0 dies 1s in, recovers after 10s of downtime
-        sys.controller.inject_failure("colocated", 0, at=1.0, downtime=10.0)
-    wl = WorkloadConfig(n_requests=300, rate=40.0, prompt_mean=512,
-                        output_mean=96, seed=0)
-    rep = sys.run(generate(wl))
-    print(f"{name:22s} tok/s {rep['throughput_tok_s']:8.0f}   "
-          f"ttft_p99 {rep['ttft_p99_s']*1e3:8.1f} ms   "
-          f"tpot_p99 {rep['tpot_p99_s']*1e3:7.1f} ms   "
-          f"completed {rep['n_completed']}")
-    return rep
+CASES = {
+    "healthy x4": [],
+    # replica 0 dies 1s in, recovers after 10s of downtime
+    "1 failure (10s)": [FaultSpec(kind="failure", cluster="colocated",
+                                  replica=0, at=1.0, downtime=10.0)],
+    "1 straggler (3x)": [FaultSpec(kind="straggler", cluster="colocated",
+                                   replica=1, slowdown=3.0)],
+}
 
 
 def main():
-    base = run_case("healthy x4")
-    f = run_case("1 failure (10s)", fail=True)
-    s = run_case("1 straggler (3x)", straggler=True)
+    reports = {}
+    for name, faults in CASES.items():
+        spec = SimSpec.from_dict(BASE.to_dict())
+        spec.faults = faults
+        rep = run(spec)
+        reports[name] = rep
+        print(f"{name:22s} tok/s {rep['throughput_tok_s']:8.0f}   "
+              f"ttft_p99 {rep['ttft_p99_s']*1e3:8.1f} ms   "
+              f"tpot_p99 {rep['tpot_p99_s']*1e3:7.1f} ms   "
+              f"completed {rep['n_completed']}")
+        assert rep.all_complete, rep.conservation
+
+    base, f, s = (reports[k] for k in CASES)
     print(f"\nfailure throughput cost: "
           f"{1 - f['throughput_tok_s']/base['throughput_tok_s']:.1%}; "
           f"straggler cost: "

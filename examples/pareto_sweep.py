@@ -2,60 +2,63 @@
 
 The motivating use-case of the paper — finding the optimal serving config
 without burning 18,000 GPU-hours.  Sweeps (topology x parallelism x
-batching policy) for qwen2-7b on a 16-GPU budget and prints the frontier.
+batching policy) for qwen2-7b on a 16-GPU budget with the declarative
+sweep API: the whole study is one `sweep()` over a topology/policy axis,
+fanned out across processes, and `pareto()` reads the frontier.
 
-    PYTHONPATH=src python examples/pareto_sweep.py
+    PYTHONPATH=src python examples/pareto_sweep.py [--jobs N]
 """
-from repro.configs import get_config
-from repro.core import A800_SXM4_80G, ParallelismConfig, pareto_frontier
-from repro.core.policies.batching import ChunkedPrefill, ContinuousBatching
-from repro.core.workflows.colocated import build_colocated
-from repro.core.workflows.pd_disagg import build_pd
-from repro.workload.generator import WorkloadConfig, generate
+import argparse
+
+from repro.api import ModelRef, SimSpec, WorkloadSpec, pareto, sweep
+
+BUDGET = 16   # devices
+
+
+def candidate_axes():
+    """Zip-mode axes: (topology, batching policy) pairs per candidate."""
+    topologies, batchings, names = [], [], []
+    for tp in (1, 2, 4):
+        n = BUDGET // tp
+        for pol in ("cont", "chunked"):
+            topologies.append({"preset": "colocated", "n_replicas": n,
+                               "tp": tp})
+            batchings.append({"name": "continuous"} if pol == "cont" else
+                             {"name": "chunked_prefill", "chunk": 512})
+            names.append(f"colo x{n} tp{tp} {pol}")
+    for n_p in (4, 8, 12):
+        topologies.append({"preset": "pd", "n_prefill": n_p,
+                           "n_decode": BUDGET - n_p})
+        batchings.append(None)     # role defaults
+        names.append(f"pd {n_p}P:{BUDGET - n_p}D")
+    return topologies, batchings, names
 
 
 def main():
-    cfg = get_config("qwen2-7b")
-    hw = A800_SXM4_80G
-    wl = WorkloadConfig(n_requests=150, rate=25.0, prompt_mean=1024,
-                        output_mean=128, seed=0)
-    budget = 16
-    candidates = []
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=1)
+    args = ap.parse_args()
 
-    for tp in (1, 2, 4):
-        n = budget // tp
-        candidates.append((f"colo x{n} tp{tp} cont",
-                           lambda tp=tp, n=n: build_colocated(
-                               cfg, hw, n_replicas=n,
-                               par=ParallelismConfig(tp=tp),
-                               policy=ContinuousBatching())))
-        candidates.append((f"colo x{n} tp{tp} chunked",
-                           lambda tp=tp, n=n: build_colocated(
-                               cfg, hw, n_replicas=n,
-                               par=ParallelismConfig(tp=tp),
-                               policy=ChunkedPrefill(chunk=512))))
-    for n_p in (4, 8, 12):
-        n_d = budget - n_p
-        candidates.append((f"pd {n_p}P:{n_d}D",
-                           lambda n_p=n_p, n_d=n_d: build_pd(
-                               cfg, hw, n_prefill=n_p, n_decode=n_d)))
+    base = SimSpec(model=ModelRef("qwen2-7b"),
+                   workload=WorkloadSpec(n_requests=150, rate=25.0,
+                                         prompt_mean=1024, output_mean=128),
+                   seed=0)
+    topologies, batchings, names = candidate_axes()
+    reports = sweep(base, {"topology": topologies,
+                           "policy.batching": batchings},
+                    mode="zip", jobs=args.jobs)
 
-    points = []
     print(f"{'config':24s} {'tok/s/dev':>10s} {'tpot_p50(ms)':>13s} "
           f"{'ttft_p99(ms)':>13s}")
-    for name, builder in candidates:
-        rep = builder().run(generate(wl))
-        thr = rep["throughput_tok_s_per_device"]
-        inter = 1.0 / max(rep["tpot_p50_s"], 1e-9)
-        points.append(((thr, inter), name, rep))
-        print(f"{name:24s} {thr:10.1f} {rep['tpot_p50_s']*1e3:13.2f} "
-              f"{rep['ttft_p99_s']*1e3:13.1f}")
+    for name, rep in zip(names, reports):
+        print(f"{name:24s} {rep['throughput_tok_s_per_device']:10.1f} "
+              f"{rep['tpot_p50_s'] * 1e3:13.2f} "
+              f"{rep['ttft_p99_s'] * 1e3:13.1f}")
 
-    front = pareto_frontier([p for p, _, _ in points])
-    names = [n for (p, n, _) in points if p in front]
+    front = pareto(reports)
     print("\nPareto frontier (throughput x interactivity):")
-    for n in names:
-        print("  *", n)
+    for rep in front:
+        print("  *", names[reports.index(rep)])
 
 
 if __name__ == "__main__":

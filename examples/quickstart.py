@@ -1,36 +1,37 @@
 """Quickstart: simulate colocated vs PD-disaggregated serving of qwen2-7b.
 
-Runs in seconds on CPU.  Shows the core Frontier workflow: build a system
-topology, replay a workload through the event engine, read the metrics.
+Runs in seconds on CPU.  Shows the core Frontier workflow through the
+declarative experiment API: describe the system as a `SimSpec`, `run` it,
+read the typed `Report`.  The same specs serialize to YAML — see
+`examples/specs/quickstart.yaml` and `python -m repro run`.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.configs import get_config
-from repro.core import A800_SXM4_80G, ParallelismConfig
-from repro.core.workflows.colocated import build_colocated
-from repro.core.workflows.pd_disagg import build_pd
-from repro.workload.generator import WorkloadConfig, generate
+from repro.api import ModelRef, SimSpec, TopologySpec, WorkloadSpec, run
 
 
 def main():
-    cfg = get_config("qwen2-7b")
-    hw = A800_SXM4_80G
-    wl = WorkloadConfig(n_requests=200, rate=12.0, prompt_mean=1024,
-                        output_mean=128, seed=0)
+    wl = WorkloadSpec(n_requests=200, rate=12.0, prompt_mean=1024,
+                      output_mean=128)
+    colo = SimSpec(name="colocated-2xTP1", model=ModelRef("qwen2-7b"),
+                   topology=TopologySpec(preset="colocated", n_replicas=2,
+                                         tp=1),
+                   workload=wl, seed=0)
+    pd = colo.with_(**{"name": "pd-1P1D",
+                       "topology": {"preset": "pd", "n_prefill": 1,
+                                    "n_decode": 1}})
 
-    colo = build_colocated(cfg, hw, n_replicas=2,
-                           par=ParallelismConfig(tp=1))
-    rep_c = colo.run(generate(wl))
-
-    pd = build_pd(cfg, hw, n_prefill=1, n_decode=1)
-    rep_p = pd.run(generate(wl))
+    rep_c = run(colo)
+    rep_p = run(pd)
 
     print(f"{'metric':28s} {'colocated(2xTP1)':>18s} {'PD(1P+1D)':>14s}")
     for k in ("throughput_tok_s_per_device", "ttft_p50_s", "ttft_p99_s",
-              "tpot_p50_s", "tpot_p99_s"):
+              "tpot_p50_s", "tpot_p99_s", "e2e_p50_s", "queue_p99_s"):
         print(f"{k:28s} {rep_c[k]:18.4f} {rep_p[k]:14.4f}")
     print("\nPD decouples decode interactivity from long prefills "
           "(compare tpot_p99).")
+    print(f"provenance: spec {rep_p.spec_hash}, {rep_p.sim_events} events "
+          f"in {rep_p.wall_clock_s:.2f}s wall clock")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,5 @@
+"""``python -m repro`` — declarative experiment CLI (see repro.api.cli)."""
+from repro.api.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Declarative experiment API: SimSpec -> run -> Report, and sweeps.
+
+This package is the public surface of the simulator:
+
+- :mod:`repro.api.spec` — ``SimSpec`` and its serializable sub-specs
+  (model / topology / workload / policy / opmodel / SLO / faults);
+- :mod:`repro.api.run` — ``run(spec) -> Report`` (typed, self-describing);
+- :mod:`repro.api.sweep` — grid/zip expansion with process-pool fan-out,
+  JSONL streaming, and ``pareto`` / ``best_under_slo`` helpers;
+- :mod:`repro.api.cli` — the ``python -m repro`` command line.
+"""
+from repro.api.run import Report, build, run  # noqa: F401
+from repro.api.spec import (  # noqa: F401
+    FaultSpec, ModelRef, OpModelSpec, PolicySpec, SimSpec, SLOSpec,
+    SpecError, TopologySpec, WorkloadSpec,
+)
+from repro.api.sweep import best_under_slo, expand, pareto, sweep  # noqa: F401
+
+__all__ = [
+    "SimSpec", "ModelRef", "TopologySpec", "WorkloadSpec", "PolicySpec",
+    "OpModelSpec", "SLOSpec", "FaultSpec", "SpecError",
+    "run", "build", "Report",
+    "sweep", "expand", "pareto", "best_under_slo",
+]

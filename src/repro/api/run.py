@@ -1,0 +1,218 @@
+"""``run(spec) -> Report``: execute one SimSpec and return a typed report.
+
+The Report replaces the raw metrics dict: summary percentiles (TTFT/TPOT/
+e2e/queueing/goodput), per-cluster breakdowns (utilization, replica stats,
+AF expert-parallel totals incl. straggler excess and cross-cluster bytes),
+the request-conservation check, and provenance (spec hash, wall clock,
+event count) — everything a sweep point needs to be self-describing on
+disk.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import asdict, dataclass
+from datetime import datetime, timezone
+from typing import Any, Dict, Mapping, Optional
+
+from repro.api.spec import SimSpec, SpecError, _resolve_hw
+from repro.configs import get_config
+from repro.core.hardware import HardwareSpec, LinkSpec, ParallelismConfig
+from repro.core.opmodels import resolve_opmodels
+from repro.core.policies.batching import resolve_batching
+from repro.core.topology import SystemHandle, build_system
+from repro.core.workflows.af_disagg import build_af
+from repro.core.workflows.colocated import build_colocated
+from repro.core.workflows.pd_disagg import build_pd
+
+
+@dataclass
+class Report:
+    """Typed result of one simulation run (JSON-serializable)."""
+    name: str
+    spec: Dict[str, Any]
+    spec_hash: str
+    summary: Dict[str, float]
+    clusters: Dict[str, Dict[str, Any]]
+    conservation: Dict[str, int]
+    all_complete: bool
+    n_devices: int
+    sim_events: int
+    sim_duration_s: float
+    wall_clock_s: float
+    created_at: str
+    point: Optional[Dict[str, Any]] = None   # sweep-axis assignment
+
+    def __getitem__(self, key: str) -> float:
+        return self.summary[key]
+
+    def get(self, key: str, default: Any = None) -> Any:
+        return self.summary.get(key, default)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "Report":
+        return cls(**dict(d))
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True,
+                          default=float)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=2))
+            f.write("\n")
+
+
+# ----------------------------------------------------------------- build --
+def build(spec: SimSpec, *,
+          hardware: Optional[HardwareSpec] = None,
+          ops=None) -> SystemHandle:
+    """Compile a validated SimSpec into a runnable SystemHandle.
+
+    ``hardware``/``ops`` inject measured/calibrated objects (the
+    benchmark-calibration flow); by default both come from the spec.
+    """
+    spec.validate()
+    cfg = get_config(spec.model.name, smoke=spec.model.smoke)
+    topo = spec.topology
+    hw = hardware if hardware is not None \
+        else _resolve_hw(topo.hardware, "topology.hardware")
+    if ops is None:
+        ops = resolve_opmodels(spec.opmodel.name, hw)
+    pol = spec.policy
+    common = dict(ops=ops, routing=pol.router, seed=spec.seed,
+                  memory=pol.memory, queue_policy=pol.scheduler,
+                  memoize=topo.memoize)
+
+    def batching(role: str, name: str = ""):
+        try:
+            return resolve_batching(pol.batching_for(role, name))
+        except (KeyError, TypeError) as e:
+            raise SpecError(f"policy.batching: {e}") from e
+
+    if topo.preset == "colocated":
+        return build_colocated(
+            cfg, hw, n_replicas=topo.n_replicas,
+            par=ParallelismConfig(tp=topo.tp, pp=topo.pp, ep=topo.ep),
+            policy=batching("colocated", "colocated"), **common)
+    if topo.preset == "pd":
+        return build_pd(
+            cfg, hw, n_prefill=topo.n_prefill, n_decode=topo.n_decode,
+            prefill_par=ParallelismConfig(tp=topo.prefill_tp),
+            decode_par=ParallelismConfig(tp=topo.decode_tp),
+            prefill_policy=batching("prefill", "prefill"),
+            decode_policy=batching("decode", "decode"),
+            transfer_bw=topo.transfer_bw, **common)
+    if topo.preset == "af":
+        common.pop("memoize")
+        link = None
+        if topo.expert_link_bw is not None:
+            link = LinkSpec("decode", "decode-experts",
+                            bandwidth=topo.expert_link_bw,
+                            latency=topo.expert_link_latency)
+        return build_af(
+            cfg, hw, n_prefill=topo.n_prefill, n_decode=topo.n_decode,
+            m=topo.m, attn_par=ParallelismConfig(tp=topo.attn_tp),
+            ffn_par=ParallelismConfig(tp=topo.ffn_tp, ep=topo.ffn_ep),
+            prefill_par=ParallelismConfig(tp=topo.prefill_tp),
+            remote_expert_ranks=tuple(topo.remote_expert_ranks),
+            expert_cluster_hw=(_resolve_hw(topo.expert_cluster_hw,
+                                           "topology.expert_cluster_hw")
+                               if topo.expert_cluster_hw else None),
+            expert_link=link, memoize=topo.memoize, **common)
+    # inline StageGraph
+    graph = topo.inline_graph(batching=lambda role, name:
+                              pol.batching_for(role, name))
+    return build_system(cfg, hw, graph, transfer_bw=topo.transfer_bw,
+                        **{k: v for k, v in common.items()
+                           if k != "memoize"})
+
+
+def _apply_faults(spec: SimSpec, handle: SystemHandle) -> None:
+    for i, f in enumerate(spec.faults):
+        cluster = handle.clusters[f.cluster]
+        if f.replica >= len(cluster.replicas):
+            raise SpecError(
+                f"faults[{i}].replica: index {f.replica} out of range — "
+                f"cluster {f.cluster!r} has {len(cluster.replicas)} "
+                f"replicas")
+        if f.kind == "failure":
+            handle.controller.inject_failure(f.cluster, f.replica,
+                                             at=f.at, downtime=f.downtime)
+        else:   # straggler
+            cluster.replicas[f.replica].slowdown = f.slowdown
+
+
+def _cluster_breakdown(handle: SystemHandle) -> Dict[str, Dict[str, Any]]:
+    now = handle.engine.now
+    out: Dict[str, Dict[str, Any]] = {}
+    for name, cluster in handle.clusters.items():
+        cspec = getattr(cluster, "spec", None)
+        info: Dict[str, Any] = {
+            "role": cluster.role,
+            "n_replicas": len(cluster.replicas),
+            "devices": (cspec.n_replicas * cspec.devices_per_replica()
+                        if cspec is not None else len(cluster.replicas)),
+            "hardware": getattr(getattr(cluster, "hw", None), "name", None),
+            "utilization": cluster.utilization(now),
+            "replicas": {w.name: dict(w.stats) for w in cluster.replicas},
+        }
+        # AF expert-parallel observability: aggregate per-replica totals
+        af: Dict[str, float] = {}
+        for w in cluster.replicas:
+            totals = getattr(w.predictor, "af_totals", None)
+            if totals:
+                for k, v in totals.items():
+                    af[k] = af.get(k, 0) + v
+        if af:
+            info["af"] = af
+        out[name] = info
+    return out
+
+
+# ------------------------------------------------------------------- run --
+def run(spec: SimSpec, *,
+        hardware: Optional[HardwareSpec] = None,
+        ops=None,
+        engine_overhead: Optional[float] = None) -> Report:
+    """Validate, build, and run one experiment; return its Report.
+
+    Same spec + same seed is bit-deterministic: the event engine orders
+    simultaneous events by schedule sequence and every RNG is seeded from
+    ``spec.seed``.
+    """
+    t0 = time.perf_counter()
+    handle = build(spec, hardware=hardware, ops=ops)
+    if engine_overhead is not None:
+        for cluster in handle.clusters.values():
+            for w in cluster.replicas:
+                w.predictor.engine_overhead = engine_overhead
+    _apply_faults(spec, handle)
+    requests = spec.workload.build_requests(spec.seed)
+    closed = (spec.workload.concurrency
+              if spec.workload.arrival == "closed" else None)
+    summary = handle.run(
+        requests,
+        until=spec.until if spec.until is not None else float("inf"),
+        closed_concurrency=closed,
+        slo_ttft=spec.slo.ttft_s if spec.slo else None,
+        slo_tpot=spec.slo.tpot_s if spec.slo else None)
+    wall = time.perf_counter() - t0
+    conservation = handle.controller.conservation_check()
+    return Report(
+        name=spec.name,
+        spec=spec.to_dict(),
+        spec_hash=spec.spec_hash(),
+        summary=summary,
+        clusters=_cluster_breakdown(handle),
+        conservation=conservation,
+        all_complete=(conservation == {"complete": len(requests)}),
+        n_devices=handle.n_devices,
+        sim_events=handle.engine.processed,
+        sim_duration_s=summary.get("duration_s", 0.0),
+        wall_clock_s=wall,
+        created_at=datetime.now(timezone.utc).isoformat(timespec="seconds"),
+    )

@@ -1,0 +1,609 @@
+"""SimSpec: the fully serializable description of one simulation experiment.
+
+A spec is a plain dataclass tree — model reference, topology (preset or
+inline StageGraph), workload, policies (all resolved by registry name),
+operator models, SLOs, fault injections, seed — that round-trips through
+dict/JSON/YAML and validates at build time with actionable errors.  It is
+the single declarative front door to the simulator:
+
+    spec = SimSpec(model=ModelRef("qwen2-7b"),
+                   topology=TopologySpec(preset="pd", n_prefill=1,
+                                         n_decode=2),
+                   workload=WorkloadSpec(n_requests=200, rate=12.0))
+    report = repro.api.run(spec)
+
+or, from YAML::
+
+    report = repro.api.run(SimSpec.load("examples/specs/quickstart.yaml"))
+
+Everything in a spec is data (names, numbers, lists) so specs hash
+(`spec_hash`), pickle across process pools (`repro.api.sweep`), and diff
+in version control.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict, dataclass, field, fields
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
+
+from repro.configs import REGISTRY
+from repro.core.hardware import HARDWARE, HardwareSpec, LinkSpec, \
+    ParallelismConfig
+from repro.core.opmodels import OPMODELS
+from repro.core.policies.batching import resolve_batching
+from repro.core.policies.memory import resolve_memory
+from repro.core.policies.scheduling import resolve_scheduler
+from repro.core.routing import resolve_router
+from repro.core.topology import ClusterSpec, ROLES, StageGraph
+from repro.workload.generator import ARRIVALS
+
+PRESETS = ("colocated", "pd", "af")
+LENGTH_KINDS = ("fixed", "uniform", "lognormal", "bimodal")
+FAULT_KINDS = ("failure", "straggler")
+
+
+class SpecError(ValueError):
+    """A spec failed validation; the message names the offending path."""
+
+
+def _from_mapping(cls, data: Any, path: str):
+    """Build dataclass ``cls`` from a mapping, rejecting unknown keys."""
+    if data is None or isinstance(data, cls):
+        return data
+    if not isinstance(data, Mapping):
+        raise SpecError(f"{path}: expected a mapping for {cls.__name__}, "
+                        f"got {type(data).__name__}")
+    known = {f.name for f in fields(cls)}
+    unknown = sorted(set(data) - known)
+    if unknown:
+        raise SpecError(f"{path}: unknown field(s) {unknown}; "
+                        f"known: {sorted(known)}")
+    return cls(**dict(data))
+
+
+def _coerce(obj: Any, kind: type, *names: str) -> None:
+    """Coerce numeric fields in place (YAML 1.1 reads '2.5e10' as a str)."""
+    for n in names:
+        v = getattr(obj, n)
+        if v is None or isinstance(v, kind):
+            continue
+        try:
+            setattr(obj, n, kind(v))
+        except (TypeError, ValueError) as e:
+            raise SpecError(f"{type(obj).__name__.lower()}.{n}: expected "
+                            f"{kind.__name__}, got {v!r}") from e
+
+
+def _resolve_hw(hw: Union[str, HardwareSpec], path: str) -> HardwareSpec:
+    if isinstance(hw, HardwareSpec):
+        return hw
+    if hw not in HARDWARE:
+        raise SpecError(f"{path}: unknown hardware {hw!r}; "
+                        f"available: {sorted(HARDWARE)}")
+    return HARDWARE[hw]
+
+
+# --------------------------------------------------------------- model ----
+@dataclass
+class ModelRef:
+    """A model architecture by registry name (see ``repro.configs``)."""
+    name: str = "qwen2-7b"
+    smoke: bool = False      # reduced same-family variant (CI-sized)
+
+    def validate(self) -> None:
+        if self.name not in REGISTRY:
+            raise SpecError(f"model.name: unknown model {self.name!r}; "
+                            f"available: {sorted(REGISTRY)}")
+
+
+# ------------------------------------------------------------ topology ----
+_CLUSTER_KEYS = {
+    "name", "role", "n_replicas", "tp", "pp", "ep", "hardware", "step",
+    "m", "attn_tp", "ffn_tp", "ffn_ep", "remote_expert_ranks",
+    "expert_cluster_hw", "expert_link_bw", "expert_link_latency",
+    "batching", "seed_offset", "replica_prefix", "memoize",
+}
+_LINK_KEYS = {"src", "dst", "bandwidth", "latency"}
+
+
+@dataclass
+class TopologySpec:
+    """Preset topology with knobs, or an inline cluster/link graph.
+
+    ``preset`` is one of "colocated" | "pd" | "af" (compiled through the
+    corresponding ``build_*`` preset); ``preset=None`` takes the inline
+    ``clusters``/``links`` dicts and compiles them to a ``StageGraph``.
+    """
+    preset: Optional[str] = "colocated"
+    hardware: str = "A800-SXM4-80G"
+    transfer_bw: Optional[float] = None   # flat KV-transfer fallback (B/s)
+    memoize: bool = True                  # step-time memo cache (PR 1)
+    # colocated knobs
+    n_replicas: int = 1
+    tp: int = 1
+    pp: int = 1
+    ep: int = 1
+    # pd knobs (also the prefill side of "af")
+    n_prefill: int = 1
+    n_decode: int = 1
+    prefill_tp: int = 1
+    decode_tp: int = 1
+    # af knobs
+    m: int = 2
+    attn_tp: int = 1
+    ffn_tp: int = 1
+    ffn_ep: int = 1
+    remote_expert_ranks: List[int] = field(default_factory=list)
+    expert_cluster_hw: Optional[str] = None
+    expert_link_bw: Optional[float] = None
+    expert_link_latency: float = 0.0
+    # inline graph (preset=None)
+    clusters: Optional[List[Dict[str, Any]]] = None
+    links: Optional[List[Dict[str, Any]]] = None
+
+    def __post_init__(self) -> None:
+        _coerce(self, float, "transfer_bw", "expert_link_bw",
+                "expert_link_latency")
+        _coerce(self, int, "n_replicas", "tp", "pp", "ep", "n_prefill",
+                "n_decode", "prefill_tp", "decode_tp", "m", "attn_tp",
+                "ffn_tp", "ffn_ep")
+        self.remote_expert_ranks = [int(r) for r in self.remote_expert_ranks]
+
+    # ------------------------------------------------------- validation --
+    def validate(self) -> None:
+        _resolve_hw(self.hardware, "topology.hardware")
+        if self.preset is None:
+            if not self.clusters:
+                raise SpecError("topology: preset=None needs inline "
+                                "'clusters' (or pick a preset from "
+                                f"{PRESETS})")
+            self.inline_graph().validate()
+            return
+        if self.preset not in PRESETS:
+            raise SpecError(f"topology.preset: unknown preset "
+                            f"{self.preset!r}; available: {PRESETS} "
+                            f"(or None with inline clusters)")
+        if self.clusters or self.links:
+            raise SpecError("topology: inline 'clusters'/'links' require "
+                            "preset=None (they are ignored by presets)")
+        for knob in ("n_replicas", "tp", "pp", "ep", "n_prefill",
+                     "n_decode", "prefill_tp", "decode_tp", "m",
+                     "attn_tp", "ffn_tp", "ffn_ep"):
+            if getattr(self, knob) < 1:
+                raise SpecError(f"topology.{knob}: must be >= 1, "
+                                f"got {getattr(self, knob)}")
+        if self.expert_cluster_hw is not None:
+            _resolve_hw(self.expert_cluster_hw, "topology.expert_cluster_hw")
+        if self.remote_expert_ranks:
+            if self.preset != "af":
+                raise SpecError("topology.remote_expert_ranks: only the "
+                                "'af' preset places experts remotely")
+            ep = max(self.ffn_ep, self.ffn_tp, 1)
+            bad = [r for r in self.remote_expert_ranks if not 0 <= r < ep]
+            if bad:
+                raise SpecError(f"topology.remote_expert_ranks: ranks {bad} "
+                                f"out of range for ffn_ep={ep}")
+        elif self.expert_cluster_hw or self.expert_link_bw:
+            raise SpecError("topology: expert_cluster_hw/expert_link_bw "
+                            "have no effect without remote_expert_ranks")
+
+    def cluster_names(self) -> List[str]:
+        if self.preset == "colocated":
+            return ["colocated"]
+        if self.preset in ("pd", "af"):
+            return ["prefill", "decode"]
+        return [c.get("name", "?") for c in (self.clusters or [])]
+
+    # ----------------------------------------------------- inline graph --
+    def inline_graph(self, batching=None) -> StageGraph:
+        """Compile inline cluster/link dicts to a core StageGraph.
+
+        ``batching`` is an optional per-role/per-name resolver (see
+        ``PolicySpec.batching_for``) applied where a cluster dict does not
+        carry its own ``batching`` entry.
+        """
+        clusters = []
+        for i, c in enumerate(self.clusters or []):
+            path = f"topology.clusters[{i}]"
+            if not isinstance(c, Mapping):
+                raise SpecError(f"{path}: expected a mapping")
+            unknown = sorted(set(c) - _CLUSTER_KEYS)
+            if unknown:
+                raise SpecError(f"{path}: unknown field(s) {unknown}; "
+                                f"known: {sorted(_CLUSTER_KEYS)}")
+            if "name" not in c or "role" not in c:
+                raise SpecError(f"{path}: 'name' and 'role' are required")
+            if c["role"] not in ROLES:
+                raise SpecError(f"{path}.role: unknown role {c['role']!r}; "
+                                f"available: {ROLES}")
+            name = c["name"]
+            par = ParallelismConfig(tp=int(c.get("tp", 1)),
+                                    pp=int(c.get("pp", 1)),
+                                    ep=int(c.get("ep", 1)))
+            step = c.get("step", "dense")
+            attn_par = (ParallelismConfig(tp=int(c["attn_tp"]))
+                        if "attn_tp" in c else None)
+            ffn_par = (ParallelismConfig(tp=int(c.get("ffn_tp", 1)),
+                                         ep=int(c.get("ffn_ep", 1)))
+                       if ("ffn_tp" in c or "ffn_ep" in c) else None)
+            link = None
+            if c.get("expert_link_bw") is not None:
+                link = LinkSpec(name, f"{name}-experts",
+                                bandwidth=float(c["expert_link_bw"]),
+                                latency=float(c.get("expert_link_latency",
+                                                    0.0)))
+            try:
+                policy = resolve_batching(
+                    c["batching"] if "batching" in c
+                    else (batching(c["role"], name) if batching else None))
+            except (KeyError, TypeError) as e:
+                raise SpecError(f"{path}.batching: {e}") from e
+            clusters.append(ClusterSpec(
+                name=name, role=c["role"],
+                n_replicas=int(c.get("n_replicas", 1)), par=par,
+                hardware=(_resolve_hw(c["hardware"], f"{path}.hardware")
+                          if "hardware" in c else None),
+                policy=policy, step=step, m=int(c.get("m", 2)),
+                attn_par=attn_par, ffn_par=ffn_par,
+                remote_expert_ranks=tuple(
+                    int(r) for r in c.get("remote_expert_ranks", ())),
+                expert_cluster_hw=(
+                    _resolve_hw(c["expert_cluster_hw"],
+                                f"{path}.expert_cluster_hw")
+                    if c.get("expert_cluster_hw") else None),
+                expert_link=link,
+                seed_offset=int(c.get("seed_offset", 100 * i)),
+                replica_prefix=c.get("replica_prefix"),
+                memoize=bool(c.get("memoize", self.memoize))))
+        links = []
+        for i, l in enumerate(self.links or []):
+            path = f"topology.links[{i}]"
+            if not isinstance(l, Mapping):
+                raise SpecError(f"{path}: expected a mapping")
+            unknown = sorted(set(l) - _LINK_KEYS)
+            if unknown:
+                raise SpecError(f"{path}: unknown field(s) {unknown}; "
+                                f"known: {sorted(_LINK_KEYS)}")
+            if "src" not in l or "dst" not in l or "bandwidth" not in l:
+                raise SpecError(f"{path}: 'src', 'dst' and 'bandwidth' are "
+                                f"required")
+            links.append(LinkSpec(l["src"], l["dst"],
+                                  bandwidth=float(l["bandwidth"]),
+                                  latency=float(l.get("latency", 0.0))))
+        graph = StageGraph(clusters=clusters, links=links)
+        try:
+            graph.validate()
+        except ValueError as e:
+            raise SpecError(f"topology: {e}") from e
+        return graph
+
+
+# ------------------------------------------------------------ workload ----
+@dataclass
+class WorkloadSpec:
+    """Wraps ``workload.generator.WorkloadConfig`` + trace-file replay."""
+    n_requests: int = 100
+    arrival: str = "poisson"       # poisson | uniform | burst | closed
+    rate: float = 4.0
+    prompt: str = "lognormal"      # fixed | uniform | lognormal | bimodal
+    prompt_mean: int = 512
+    prompt_max: int = 8192
+    output: str = "lognormal"
+    output_mean: int = 128
+    output_max: int = 2048
+    burst_size: int = 32           # arrival="burst": requests per burst
+    burst_period: float = 1.0      # arrival="burst": seconds between bursts
+    concurrency: Optional[int] = None   # arrival="closed": in-flight cap
+    trace: Optional[str] = None    # JSONL replay path (overrides generator)
+    seed: Optional[int] = None     # None -> SimSpec.seed
+
+    def __post_init__(self) -> None:
+        _coerce(self, float, "rate", "burst_period")
+        _coerce(self, int, "n_requests", "prompt_mean", "prompt_max",
+                "output_mean", "output_max", "burst_size", "concurrency",
+                "seed")
+
+    def validate(self) -> None:
+        if self.arrival not in ARRIVALS:
+            raise SpecError(f"workload.arrival: unknown process "
+                            f"{self.arrival!r}; available: {ARRIVALS}")
+        if self.arrival == "closed" and (self.concurrency is None
+                                         or self.concurrency < 1):
+            raise SpecError(
+                "workload.concurrency: closed-loop arrivals need a "
+                "concurrency >= 1 (the in-flight request cap; the next "
+                "request arrives when a slot frees)")
+        if self.arrival in ("poisson", "uniform") and self.rate <= 0:
+            raise SpecError(f"workload.rate: open-loop arrivals need "
+                            f"rate > 0, got {self.rate}")
+        for fld in ("prompt", "output"):
+            if getattr(self, fld) not in LENGTH_KINDS:
+                raise SpecError(f"workload.{fld}: unknown length "
+                                f"distribution {getattr(self, fld)!r}; "
+                                f"available: {LENGTH_KINDS}")
+        if self.n_requests < 1:
+            raise SpecError(f"workload.n_requests: must be >= 1, "
+                            f"got {self.n_requests}")
+
+    def build_requests(self, default_seed: int = 0):
+        from repro.workload.generator import WorkloadConfig, generate, \
+            load_trace
+        if self.trace is not None:
+            return load_trace(self.trace, n_requests=self.n_requests)
+        return generate(WorkloadConfig(
+            n_requests=self.n_requests, arrival=self.arrival,
+            rate=self.rate, prompt=self.prompt,
+            prompt_mean=self.prompt_mean, prompt_max=self.prompt_max,
+            output=self.output, output_mean=self.output_mean,
+            output_max=self.output_max, burst_size=self.burst_size,
+            burst_period=self.burst_period, concurrency=self.concurrency,
+            seed=self.seed if self.seed is not None else default_seed))
+
+
+# ------------------------------------------------------------ policies ----
+@dataclass
+class PolicySpec:
+    """Registry-name policy selection, resolved uniformly at build time.
+
+    ``batching`` is either one policy for every cluster (name or
+    ``{"name": ..., **kwargs}``) or a mapping keyed by role
+    (``{"prefill": "continuous", "decode": {"name": "chunked_prefill",
+    "chunk": 256}}``).  ``router`` picks the MoE routing module,
+    ``scheduler`` the queue-ordering policy, ``memory`` the KV manager.
+    """
+    router: Union[None, str, Dict[str, Any]] = None
+    batching: Union[None, str, Dict[str, Any]] = None
+    scheduler: Union[None, str, Dict[str, Any]] = None
+    memory: Union[None, str, Dict[str, Any]] = None
+
+    def _role_keyed(self) -> bool:
+        return (isinstance(self.batching, Mapping)
+                and "name" not in self.batching)
+
+    def batching_for(self, role: str, name: str = "") \
+            -> Union[None, str, Dict[str, Any]]:
+        if self._role_keyed():
+            return self.batching.get(name, self.batching.get(role))
+        return self.batching
+
+    def validate(self) -> None:
+        try:
+            resolve_router(self.router)
+        except (KeyError, TypeError) as e:
+            raise SpecError(f"policy.router: {e}") from e
+        try:
+            if self._role_keyed():
+                # keys are roles (or cluster names for inline graphs);
+                # every value must itself resolve
+                for v in self.batching.values():
+                    resolve_batching(v)
+            else:
+                resolve_batching(self.batching)
+        except (KeyError, TypeError) as e:
+            raise SpecError(f"policy.batching: {e}") from e
+        try:
+            resolve_scheduler(self.scheduler)
+        except (KeyError, TypeError) as e:
+            raise SpecError(f"policy.scheduler: {e}") from e
+        try:
+            resolve_memory(self.memory)
+        except (KeyError, TypeError) as e:
+            raise SpecError(f"policy.memory: {e}") from e
+
+
+@dataclass
+class OpModelSpec:
+    """Operator-model family for the ExecutionPredictor."""
+    name: str = "analytical"
+
+    def validate(self) -> None:
+        if self.name not in OPMODELS:
+            raise SpecError(f"opmodel.name: unknown operator model "
+                            f"{self.name!r}; available: {sorted(OPMODELS)}")
+
+
+@dataclass
+class SLOSpec:
+    """Service-level objectives; enables goodput/attainment in the Report."""
+    ttft_s: float = 1.0
+    tpot_s: float = 0.1
+
+    def __post_init__(self) -> None:
+        _coerce(self, float, "ttft_s", "tpot_s")
+
+    def validate(self) -> None:
+        if self.ttft_s <= 0 or self.tpot_s <= 0:
+            raise SpecError(f"slo: ttft_s/tpot_s must be > 0, got "
+                            f"({self.ttft_s}, {self.tpot_s})")
+
+
+@dataclass
+class FaultSpec:
+    """One injected fault: a replica failure or a chronic straggler."""
+    kind: str = "failure"          # "failure" | "straggler"
+    cluster: str = "colocated"
+    replica: int = 0
+    at: float = 0.0                # failure: injection time (s)
+    downtime: float = 10.0         # failure: recovery delay (s)
+    slowdown: float = 1.0          # straggler: step-time multiplier
+
+    def __post_init__(self) -> None:
+        _coerce(self, float, "at", "downtime", "slowdown")
+        _coerce(self, int, "replica")
+
+    def validate(self, cluster_names: Sequence[str], path: str) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise SpecError(f"{path}.kind: unknown fault kind "
+                            f"{self.kind!r}; available: {FAULT_KINDS}")
+        if self.cluster not in cluster_names:
+            raise SpecError(f"{path}.cluster: unknown cluster "
+                            f"{self.cluster!r}; topology has "
+                            f"{list(cluster_names)}")
+        if self.replica < 0:
+            raise SpecError(f"{path}.replica: must be >= 0")
+        if self.kind == "straggler" and self.slowdown <= 0:
+            raise SpecError(f"{path}.slowdown: must be > 0, "
+                            f"got {self.slowdown}")
+
+
+# -------------------------------------------------------------- SimSpec ----
+@dataclass
+class SimSpec:
+    """One fully-described simulation experiment (see module docstring)."""
+    model: ModelRef = field(default_factory=ModelRef)
+    topology: TopologySpec = field(default_factory=TopologySpec)
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
+    policy: PolicySpec = field(default_factory=PolicySpec)
+    opmodel: OpModelSpec = field(default_factory=OpModelSpec)
+    slo: Optional[SLOSpec] = None
+    faults: List[FaultSpec] = field(default_factory=list)
+    seed: int = 0
+    until: Optional[float] = None   # sim horizon (s); None -> completion
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        _coerce(self, int, "seed")
+        _coerce(self, float, "until")
+
+    # ---------------------------------------------------------- validate --
+    def validate(self) -> "SimSpec":
+        self.model.validate()
+        self.topology.validate()
+        self.workload.validate()
+        self.policy.validate()
+        self.opmodel.validate()
+        if self.slo is not None:
+            self.slo.validate()
+        names = self.topology.cluster_names()
+        if self.policy._role_keyed():
+            # role-keyed batching: a misspelled key would silently fall
+            # back to the default policy, so reject unknown keys here
+            # (where the topology's cluster names are known)
+            bad = sorted(set(self.policy.batching)
+                         - set(ROLES) - set(names))
+            if bad:
+                raise SpecError(
+                    f"policy.batching: unknown role/cluster key(s) {bad}; "
+                    f"roles: {sorted(ROLES)}, clusters: {names} (or give "
+                    f"one policy for all clusters as {{'name': ...}})")
+        for i, f in enumerate(self.faults):
+            f.validate(names, f"faults[{i}]")
+        if self.until is not None and self.until <= 0:
+            raise SpecError(f"until: must be > 0 seconds, got {self.until}")
+        return self
+
+    # ------------------------------------------------------ serialization --
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Mapping[str, Any]) -> "SimSpec":
+        if not isinstance(data, Mapping):
+            raise SpecError(f"spec: expected a mapping, "
+                            f"got {type(data).__name__}")
+        known = {f.name for f in fields(cls)}
+        unknown = sorted(set(data) - known)
+        if unknown:
+            raise SpecError(f"spec: unknown field(s) {unknown}; "
+                            f"known: {sorted(known)}")
+        d = dict(data)
+        spec = cls(
+            model=_from_mapping(ModelRef, d.get("model"), "model")
+            or ModelRef(),
+            topology=_from_mapping(TopologySpec, d.get("topology"),
+                                   "topology") or TopologySpec(),
+            workload=_from_mapping(WorkloadSpec, d.get("workload"),
+                                   "workload") or WorkloadSpec(),
+            policy=_from_mapping(PolicySpec, d.get("policy"), "policy")
+            or PolicySpec(),
+            opmodel=_from_mapping(OpModelSpec, d.get("opmodel"), "opmodel")
+            or OpModelSpec(),
+            slo=_from_mapping(SLOSpec, d.get("slo"), "slo"),
+            faults=[_from_mapping(FaultSpec, f, f"faults[{i}]")
+                    for i, f in enumerate(d.get("faults") or [])],
+            seed=int(d.get("seed", 0)),
+            until=d.get("until"),
+            name=d.get("name", ""))
+        return spec
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "SimSpec":
+        return cls.from_dict(json.loads(text))
+
+    def to_yaml(self) -> str:
+        import yaml
+        return yaml.safe_dump(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_yaml(cls, text: str) -> "SimSpec":
+        import yaml
+        data = yaml.safe_load(text)
+        if data is None:
+            raise SpecError("spec: empty YAML document")
+        return cls.from_dict(data)
+
+    @classmethod
+    def load(cls, path: str) -> "SimSpec":
+        """Load a spec from a .yaml/.yml/.json file."""
+        with open(path) as f:
+            text = f.read()
+        if str(path).endswith(".json"):
+            return cls.from_json(text)
+        return cls.from_yaml(text)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() if str(path).endswith(".json")
+                    else self.to_yaml())
+
+    # ----------------------------------------------------------- identity --
+    def spec_hash(self) -> str:
+        """Deterministic 16-hex-digit digest of the canonical spec dict."""
+        blob = json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"), default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def with_(self, **updates: Any) -> "SimSpec":
+        """Copy with dotted-path updates, e.g. ``with_(**{"workload.rate":
+        8.0, "seed": 3})`` — the mechanism sweeps use for axis points."""
+        d = self.to_dict()
+        for key, value in updates.items():
+            set_path(d, key, value)
+        return SimSpec.from_dict(d)
+
+
+def set_path(d: Dict[str, Any], path: str, value: Any) -> None:
+    """Set a dotted path in a nested spec dict, with shorthand resolution:
+    a bare field name (``tp``) is searched in the spec root, then in
+    topology / workload / policy."""
+    parts = path.split(".")
+    if len(parts) == 1 and parts[0] not in d:
+        for section in ("topology", "workload", "policy"):
+            sub = d.get(section)
+            if isinstance(sub, Mapping) and parts[0] in sub:
+                parts = [section, parts[0]]
+                break
+        else:
+            raise SpecError(
+                f"axis/path {path!r}: not a spec field and not found in "
+                f"topology/workload/policy; use a dotted path like "
+                f"'workload.rate'")
+    cur: Any = d
+    for p in parts[:-1]:
+        if not isinstance(cur, dict):
+            raise SpecError(f"axis/path {path!r}: {p!r} is not a mapping")
+        if not isinstance(cur.get(p), dict):
+            if cur.get(p) is not None:
+                raise SpecError(
+                    f"axis/path {path!r}: {p!r} holds "
+                    f"{cur[p]!r}, not a mapping — replace the whole "
+                    f"field instead")
+            cur[p] = {}     # e.g. slo: None -> slo.ttft_s=... creates it
+        cur = cur[p]
+    if not isinstance(cur, dict):
+        raise SpecError(f"axis/path {path!r}: parent is not a mapping")
+    cur[parts[-1]] = value

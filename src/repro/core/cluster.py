@@ -50,6 +50,7 @@ class ReplicaWorker:
         self.running: List[Request] = []  # decoding requests resident here
         self.busy = False
         self.failed = False
+        self._epoch = 0      # bumped on failure; stale BATCH_DONEs dropped
         self.cluster: Optional["ClusterWorker"] = None
         self.stats = {"batches": 0, "busy_time": 0.0, "tokens": 0,
                       "prefill_tokens": 0}
@@ -86,15 +87,22 @@ class ReplicaWorker:
         for r, _ in plan.prefill:
             if r.state == RState.QUEUED_PREFILL:
                 r.to(RState.PREFILL_RUNNING, self.engine.now)
+                # queueing-delay anchor: first time any replica scheduled it
+                r.timestamps.setdefault("first_scheduled", self.engine.now)
         for r in plan.decode:
             if r.state == RState.QUEUED_DECODE:
                 r.to(RState.DECODING, self.engine.now)
         self.engine.after(t, EV.BATCH_DONE,
-                          lambda ev: self._batch_done(plan),
+                          lambda ev, epoch=self._epoch:
+                          self._batch_done(plan, epoch),
                           replica=self.name, dur=t,
                           n_prefill=len(plan.prefill), n_decode=len(plan.decode))
 
-    def _batch_done(self, plan: BatchPlan) -> None:
+    def _batch_done(self, plan: BatchPlan, epoch: int = -1) -> None:
+        if epoch != -1 and epoch != self._epoch:
+            # the replica failed while this batch was in flight: its work is
+            # lost and its requests were re-routed — drop the stale event
+            return
         now = self.engine.now
         self.busy = False
         freed = False
@@ -141,6 +149,8 @@ class ReplicaWorker:
     def fail(self, downtime: float) -> List[Request]:
         """Replica failure: running work is lost and must be re-routed."""
         self.failed = True
+        self._epoch += 1      # invalidate any in-flight BATCH_DONE
+        self.busy = False
         lost = self.waiting + self.running
         self.waiting, self.running = [], []
         if self.memory is not None:

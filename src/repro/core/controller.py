@@ -11,8 +11,9 @@ Colocated mode degenerates to routing + tracking.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core.cluster import ClusterWorker, Hooks, ReplicaWorker
 from repro.core.engine import SimEngine
@@ -46,6 +47,7 @@ class GlobalController:
         self.prefill_home: Dict[int, ReplicaWorker] = {}
         self.requests: Dict[int, Request] = {}
         self._transfers_in_flight = 0
+        self._closed_queue: Deque[Request] = deque()  # closed-loop backlog
 
     # ------------------------------------------------------------- wiring --
     def hooks(self) -> Hooks:
@@ -57,11 +59,26 @@ class GlobalController:
         )
 
     # ------------------------------------------------------------ arrivals --
+    def _submit_one(self, r: Request, at: float) -> None:
+        r.arrival = at
+        self.requests[r.rid] = r
+        self.engine.at(at, EV.REQUEST_ARRIVAL,
+                       lambda ev, r=r: self._arrive(r), rid=r.rid)
+
     def submit_all(self, requests: List[Request]) -> None:
         for r in requests:
-            self.requests[r.rid] = r
-            self.engine.at(r.arrival, EV.REQUEST_ARRIVAL,
-                           lambda ev, r=r: self._arrive(r), rid=r.rid)
+            self._submit_one(r, r.arrival)
+
+    def submit_closed(self, requests: List[Request], concurrency: int) -> None:
+        """Closed-loop injection: keep at most ``concurrency`` requests in
+        flight; a new request arrives the moment a slot frees (its arrival
+        timestamp is re-stamped to the completion time that freed it)."""
+        if concurrency < 1:
+            raise ValueError(f"closed-loop concurrency must be >= 1, "
+                             f"got {concurrency}")
+        self._closed_queue.extend(requests)
+        for _ in range(min(concurrency, len(self._closed_queue))):
+            self._submit_one(self._closed_queue.popleft(), at=self.engine.now)
 
     def _entry_clusters(self) -> List[ClusterWorker]:
         if self.entry:
@@ -72,6 +89,10 @@ class GlobalController:
         return [c for c in self.clusters.values() if c.role == "decode"]
 
     def _arrive(self, r: Request) -> None:
+        # anchor the measurement window to the first actual arrival (a late
+        # first request must not inflate the measured duration)
+        if self.metrics.start is None:
+            self.metrics.start = self.engine.now
         # least-loaded healthy replica across all entry clusters
         candidates = []
         for cluster in self._entry_clusters():
@@ -154,6 +175,8 @@ class GlobalController:
     # ------------------------------------------------------------- endings --
     def on_request_complete(self, r: Request, replica: ReplicaWorker) -> None:
         self.metrics.on_complete(r, replica)
+        if self._closed_queue:      # closed loop: a slot just freed
+            self._submit_one(self._closed_queue.popleft(), at=self.engine.now)
 
     # ------------------------------------------------------------ failures --
     def inject_failure(self, cluster_name: str, replica_idx: int,

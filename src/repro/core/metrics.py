@@ -17,7 +17,10 @@ def _pct(xs: Sequence[float], q: float) -> float:
 class MetricsCollector:
     completed: List[Request] = field(default_factory=list)
     token_times: List[float] = field(default_factory=list)
-    start: float = 0.0
+    # measurement-window start: anchored to the FIRST request arrival by the
+    # controller (None until then) — measuring from t=0 silently inflates
+    # the duration whenever the first arrival is late
+    start: Optional[float] = None
     end: float = 0.0
 
     def on_token(self, r: Request, replica, t: float) -> None:
@@ -32,9 +35,15 @@ class MetricsCollector:
     def report(self, *, n_devices: int = 1,
                slo_ttft: Optional[float] = None,
                slo_tpot: Optional[float] = None) -> Dict[str, float]:
-        dur = max(self.end - self.start, 1e-9)
+        start = self.start
+        if start is None:       # no arrival was ever observed
+            start = min((r.arrival for r in self.completed), default=0.0)
+        dur = max(self.end - start, 1e-9)
         ttfts = [r.ttft() for r in self.completed if r.ttft() is not None]
         tpots = [r.tpot() for r in self.completed if r.tpot() is not None]
+        e2es = [r.e2e() for r in self.completed if r.e2e() is not None]
+        queues = [r.timestamps["first_scheduled"] - r.arrival
+                  for r in self.completed if "first_scheduled" in r.timestamps]
         out_tokens = sum(r.generated for r in self.completed)
         rep = {
             "n_completed": len(self.completed),
@@ -45,6 +54,10 @@ class MetricsCollector:
             "ttft_p50_s": _pct(ttfts, 50), "ttft_p99_s": _pct(ttfts, 99),
             "tpot_mean_s": float(np.mean(tpots)) if tpots else float("nan"),
             "tpot_p50_s": _pct(tpots, 50), "tpot_p99_s": _pct(tpots, 99),
+            "e2e_mean_s": float(np.mean(e2es)) if e2es else float("nan"),
+            "e2e_p50_s": _pct(e2es, 50), "e2e_p99_s": _pct(e2es, 99),
+            "queue_mean_s": float(np.mean(queues)) if queues else float("nan"),
+            "queue_p50_s": _pct(queues, 50), "queue_p99_s": _pct(queues, 99),
         }
         if slo_ttft is not None and slo_tpot is not None and self.completed:
             good = [r for r in self.completed

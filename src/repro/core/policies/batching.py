@@ -121,3 +121,29 @@ class StaticBatching(BatchingPolicy):
                 break
             prefill.append((r, r.prompt_len))
         return BatchPlan(prefill, [])
+
+
+BATCHING = {c.name: c for c in (ContinuousBatching, ChunkedPrefill,
+                                StaticBatching)}
+
+
+def resolve_batching(spec) -> Optional[BatchingPolicy]:
+    """Uniform batching-policy argument handling (mirrors resolve_router).
+
+    Accepts an instance (returned as-is), a registered name ("continuous",
+    "chunked_prefill", "static"), a mapping ``{"name": ..., **kwargs}``
+    whose kwargs go to the policy constructor, or None.
+    """
+    if spec is None or isinstance(spec, BatchingPolicy):
+        return spec
+    if isinstance(spec, str):
+        spec = {"name": spec}
+    if isinstance(spec, dict):
+        kw = dict(spec)
+        name = kw.pop("name", None)
+        if name not in BATCHING:
+            raise KeyError(f"unknown batching policy {name!r}; "
+                           f"registered: {sorted(BATCHING)}")
+        return BATCHING[name](**kw)
+    raise TypeError(f"batching must be None, a name, a mapping, or a "
+                    f"BatchingPolicy; got {type(spec).__name__}")

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Tuple
 
 
 class PagedKVManager:
@@ -78,3 +78,30 @@ class MonolithicKVManager(PagedKVManager):
 
     def blocks_for(self, tokens: int) -> int:  # always reserve max_len
         return self.max_len
+
+
+MEMORY = {"paged": PagedKVManager, "monolithic": MonolithicKVManager}
+
+
+def resolve_memory(spec) -> Tuple[type, dict]:
+    """Resolve a memory-manager spec to ``(cls, constructor_kwargs)``.
+
+    Unlike batching/routing, KV managers need build-time arguments (the
+    per-replica byte budget), so resolution returns the class plus any
+    extra kwargs; the system builder supplies budget/kv_bytes_per_token.
+    Accepts None (paged defaults), a registered name, or a mapping
+    ``{"name": ..., **kwargs}`` (e.g. block_tokens, watermark).
+    """
+    if spec is None:
+        return PagedKVManager, {}
+    if isinstance(spec, str):
+        spec = {"name": spec}
+    if isinstance(spec, dict):
+        kw = dict(spec)
+        name = kw.pop("name", None)
+        if name not in MEMORY:
+            raise KeyError(f"unknown memory manager {name!r}; "
+                           f"registered: {sorted(MEMORY)}")
+        return MEMORY[name], kw
+    raise TypeError(f"memory must be None, a name, or a mapping; "
+                    f"got {type(spec).__name__}")

@@ -1,7 +1,7 @@
 """Queue-ordering policies for ClusterSchedulers."""
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 from repro.core.request import Request
 
@@ -38,3 +38,26 @@ class Priority(QueuePolicy):
 
 
 POLICIES = {p.name: p for p in (FCFS(), SJF(), Priority())}
+
+SCHEDULERS = {c.name: c for c in (FCFS, SJF, Priority)}
+
+
+def resolve_scheduler(spec) -> Optional[QueuePolicy]:
+    """Uniform queue-policy argument handling (mirrors resolve_router).
+
+    Accepts an instance, a registered name ("fcfs", "sjf", "priority"),
+    a mapping ``{"name": ..., **kwargs}``, or None.
+    """
+    if spec is None or isinstance(spec, QueuePolicy):
+        return spec
+    if isinstance(spec, str):
+        spec = {"name": spec}
+    if isinstance(spec, dict):
+        kw = dict(spec)
+        name = kw.pop("name", None)
+        if name not in SCHEDULERS:
+            raise KeyError(f"unknown queue policy {name!r}; "
+                           f"registered: {sorted(SCHEDULERS)}")
+        return SCHEDULERS[name](**kw)
+    raise TypeError(f"scheduler must be None, a name, a mapping, or a "
+                    f"QueuePolicy; got {type(spec).__name__}")

@@ -98,29 +98,35 @@ ROUTERS = {
 }
 
 
-def resolve_router(spec: Union[None, str, RoutingModule],
+def resolve_router(spec: Union[None, str, dict, RoutingModule],
                    ) -> Optional[RoutingModule]:
     """Uniform router argument handling for all builders.
 
     Accepts an instance (returned as-is), a registered name ("balanced",
-    "uniform", "zipf", ...), or None.  Names construct the router with its
-    default arguments; TraceRouting needs measured fractions, so it can only
-    be passed as an instance.
+    "uniform", "zipf", ...), a mapping ``{"name": ..., **kwargs}`` whose
+    kwargs go to the router constructor (e.g. ``{"name": "zipf",
+    "alpha": 1.4}``), or None.  Bare names construct the router with its
+    default arguments; TraceRouting needs measured fractions, so it must be
+    given its ``fractions`` kwarg or passed as an instance.
     """
     if spec is None or isinstance(spec, RoutingModule):
         return spec
     if isinstance(spec, str):
+        spec = {"name": spec}
+    if isinstance(spec, dict):
+        kw = dict(spec)
+        name = kw.pop("name", None)
         try:
-            cls = ROUTERS[spec]
+            cls = ROUTERS[name]
         except KeyError:
             raise KeyError(
-                f"unknown router {spec!r}; registered: {sorted(ROUTERS)}")
+                f"unknown router {name!r}; registered: {sorted(ROUTERS)}")
         try:
-            return cls()
+            return cls(**kw)
         except TypeError as e:
             raise TypeError(
-                f"router {spec!r} could not be constructed without "
-                f"arguments ({e}) — pass an instance instead of the name"
+                f"router {name!r} could not be constructed from {kw!r} "
+                f"({e}) — pass an instance instead of the name"
             ) from e
-    raise TypeError(f"routing must be None, a name, or a RoutingModule; "
-                    f"got {type(spec).__name__}")
+    raise TypeError(f"routing must be None, a name, a mapping, or a "
+                    f"RoutingModule; got {type(spec).__name__}")

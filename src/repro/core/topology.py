@@ -40,7 +40,6 @@ from repro.core.hardware import HardwareSpec, LinkSpec, ParallelismConfig
 from repro.core.metrics import MetricsCollector
 from repro.core.opmodels.analytical import OperatorModelSet
 from repro.core.policies.batching import BatchingPolicy, ContinuousBatching
-from repro.core.policies.memory import PagedKVManager
 from repro.core.predictor import ExecutionPredictor
 from repro.core.request import Request
 from repro.core.routing import resolve_router
@@ -55,11 +54,23 @@ class SystemHandle:
     clusters: dict
     n_devices: int
 
-    def run(self, requests: List[Request], until: float = float("inf")):
-        self.controller.metrics.start = 0.0
-        self.controller.submit_all(requests)
+    def run(self, requests: List[Request], until: float = float("inf"), *,
+            closed_concurrency: Optional[int] = None,
+            slo_ttft: Optional[float] = None,
+            slo_tpot: Optional[float] = None):
+        """Replay ``requests`` through the event engine and report metrics.
+
+        ``closed_concurrency`` switches to closed-loop injection: at most
+        that many requests in flight, the next one arriving when a slot
+        frees.  The metrics window starts at the first actual arrival.
+        """
+        if closed_concurrency is not None:
+            self.controller.submit_closed(requests, closed_concurrency)
+        else:
+            self.controller.submit_all(requests)
         self.engine.run(until)
-        return self.controller.metrics.report(n_devices=self.n_devices)
+        return self.controller.metrics.report(
+            n_devices=self.n_devices, slo_ttft=slo_ttft, slo_tpot=slo_tpot)
 
 
 def _kv_budget(cfg: ModelConfig, hw: HardwareSpec, par: ParallelismConfig,
@@ -168,16 +179,23 @@ def _default_policy(role: str) -> BatchingPolicy:
 
 def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
                  ops: Optional[OperatorModelSet] = None,
-                 routing: Union[None, str, "RoutingModule"] = None,
+                 routing: Union[None, str, dict, "RoutingModule"] = None,
                  engine: Optional[SimEngine] = None,
                  transfer_bw: Optional[float] = None,
+                 memory: Union[None, str, dict] = None,
+                 queue_policy: Union[None, str, dict, "QueuePolicy"] = None,
                  seed: int = 0) -> SystemHandle:
     """Compile a StageGraph into a runnable SystemHandle.
 
     ``hw``/``ops`` are the topology defaults; a ClusterSpec with its own
     ``hardware`` gets a fresh analytical OperatorModelSet for it (pass a
-    custom ``ops`` only for homogeneous-hardware clusters).
+    custom ``ops`` only for homogeneous-hardware clusters).  ``memory``
+    ("paged"/"monolithic" + kwargs) and ``queue_policy`` ("fcfs"/"sjf"/
+    "priority") select registered KV-manager and queue-ordering policies
+    for every replica.
     """
+    from repro.core.policies.memory import resolve_memory
+    from repro.core.policies.scheduling import resolve_scheduler
     from repro.core.workflows.af_disagg import AFPipelinePredictor
     graph.validate()
     for spec in graph.clusters:
@@ -188,6 +206,8 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
     engine = engine or SimEngine()
     ops = ops or OperatorModelSet(hw)
     routing = resolve_router(routing)
+    mem_cls, mem_kw = resolve_memory(memory)
+    qpolicy = resolve_scheduler(queue_policy)
     metrics = MetricsCollector()
     mode = graph.mode
 
@@ -228,12 +248,12 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
                 pred = ExecutionPredictor(cfg, spec.par, hw_c, ops_c,
                                           routing=routing, seed=rseed,
                                           memoize=spec.memoize)
-            mem = PagedKVManager(_kv_budget(cfg, hw_c, spec.par, pred),
-                                 pred.kv_bytes_per_token())
+            mem = mem_cls(_kv_budget(cfg, hw_c, spec.par, pred),
+                          pred.kv_bytes_per_token(), **mem_kw)
             replicas.append(ReplicaWorker(
                 engine, f"{prefix}{i}", pred,
                 spec.policy or _default_policy(spec.role),
-                mem, hooks, role=spec.role))
+                mem, hooks, role=spec.role, queue_policy=qpolicy))
         cluster = ClusterWorker(spec.name, spec.role, replicas)
         cluster.spec = spec
         cluster.hw = hw_c

@@ -244,11 +244,29 @@ class AFPipelinePredictor(ExecutionPredictor):
         self.remote_link = remote_link
         self.remote_ops = remote_ops
         self.last_stats: Optional[AFStepStats] = None
+        # run-level EP observability totals (cache hits replay the cached
+        # step's stats, so totals stay consistent with simulated time)
+        self.af_totals = {
+            "decode_steps": 0, "makespan_s": 0.0, "ep_dispatch_time_s": 0.0,
+            "ep_combine_time_s": 0.0, "ep_straggler_excess_s": 0.0,
+            "cross_cluster_bytes": 0.0, "transfer_bytes": 0.0,
+        }
+
+    def _accumulate(self, stats: AFStepStats) -> None:
+        t = self.af_totals
+        t["decode_steps"] += 1
+        t["makespan_s"] += float(stats.makespan)
+        t["ep_dispatch_time_s"] += float(stats.ep_dispatch_time)
+        t["ep_combine_time_s"] += float(stats.ep_combine_time)
+        t["ep_straggler_excess_s"] += float(stats.ep_straggler_excess)
+        t["cross_cluster_bytes"] += float(stats.cross_cluster_bytes)
+        t["transfer_bytes"] += float(stats.transfer_bytes)
 
     def _on_cache_hit(self, bd: StepBreakdown) -> None:
         # cached prefill steps carry no AF stats; keep the last decode stats
         if hasattr(bd, "af_stats"):
             self.last_stats = bd.af_stats
+            self._accumulate(bd.af_stats)
 
     def _step_time_impl(self, q_lens, kv_lens, *, decode: bool) -> StepBreakdown:
         if not decode:
@@ -260,6 +278,7 @@ class AFPipelinePredictor(ExecutionPredictor):
             remote_ranks=self.remote_ranks, remote_link=self.remote_link,
             remote_ops=self.remote_ops)
         self.last_stats = stats
+        self._accumulate(stats)
         bd = StepBreakdown()
         bd.add("af_pipeline", stats.makespan)
         bd.add("engine_overhead", self.engine_overhead)
@@ -280,8 +299,15 @@ def build_af(cfg: ModelConfig, hw: HardwareSpec, *,
              expert_cluster_hw: Optional[HardwareSpec] = None,
              remote_expert_ranks: Sequence[int] = (),
              expert_link: Optional[LinkSpec] = None,
+             memory=None, queue_policy=None,
              memoize: bool = True):
     """PD front + AF-disaggregated decode (as deployed by MegaScale-Infer).
+
+    .. deprecated::
+        ``build_af`` is kept as a thin shim over the declarative experiment
+        API; prefer ``repro.api.SimSpec`` with
+        ``TopologySpec(preset="af", ...)`` and ``repro.api.run`` — specs
+        serialize, validate, and sweep.
 
     Preset over :func:`repro.core.topology.build_system`.  Pass
     ``remote_expert_ranks`` (+ optionally ``expert_cluster_hw`` /
@@ -302,4 +328,5 @@ def build_af(cfg: ModelConfig, hw: HardwareSpec, *,
                     remote_expert_ranks=tuple(remote_expert_ranks),
                     expert_link=expert_link, memoize=memoize),
     ])
-    return build_system(cfg, hw, graph, ops=ops, routing=routing, seed=seed)
+    return build_system(cfg, hw, graph, ops=ops, routing=routing,
+                        memory=memory, queue_policy=queue_policy, seed=seed)

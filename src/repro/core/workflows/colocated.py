@@ -25,11 +25,21 @@ def build_colocated(cfg: ModelConfig, hw: HardwareSpec, *,
                     ops: Optional[OperatorModelSet] = None,
                     engine: Optional[SimEngine] = None,
                     routing=None, seed: int = 0,
+                    memory=None, queue_policy=None,
                     memoize: bool = True) -> SystemHandle:
+    """Colocated preset.
+
+    .. deprecated::
+        ``build_colocated`` is kept as a thin shim over the declarative
+        experiment API; prefer ``repro.api.SimSpec`` with
+        ``TopologySpec(preset="colocated", ...)`` and ``repro.api.run`` —
+        specs serialize, validate, and sweep.
+    """
     graph = StageGraph(clusters=[
         ClusterSpec("colocated", "colocated", n_replicas=n_replicas,
                     par=par or ParallelismConfig(tp=1), policy=policy,
                     replica_prefix="colo", memoize=memoize),
     ])
     return build_system(cfg, hw, graph, ops=ops, routing=routing,
-                        engine=engine, seed=seed)
+                        engine=engine, memory=memory,
+                        queue_policy=queue_policy, seed=seed)

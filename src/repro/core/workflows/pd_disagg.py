@@ -27,7 +27,16 @@ def build_pd(cfg: ModelConfig, hw: HardwareSpec, *,
              ops: Optional[OperatorModelSet] = None,
              transfer_bw: Optional[float] = None,
              routing=None, seed: int = 0,
+             memory=None, queue_policy=None,
              memoize: bool = True) -> SystemHandle:
+    """PD-disaggregation preset.
+
+    .. deprecated::
+        ``build_pd`` is kept as a thin shim over the declarative experiment
+        API; prefer ``repro.api.SimSpec`` with
+        ``TopologySpec(preset="pd", ...)`` and ``repro.api.run`` — specs
+        serialize, validate, and sweep.
+    """
     graph = StageGraph(clusters=[
         ClusterSpec("prefill", "prefill", n_replicas=n_prefill,
                     par=prefill_par or ParallelismConfig(tp=1),
@@ -37,4 +46,5 @@ def build_pd(cfg: ModelConfig, hw: HardwareSpec, *,
                     policy=decode_policy, seed_offset=100, memoize=memoize),
     ])
     return build_system(cfg, hw, graph, ops=ops, routing=routing,
-                        transfer_bw=transfer_bw, seed=seed)
+                        transfer_bw=transfer_bw, memory=memory,
+                        queue_policy=queue_policy, seed=seed)

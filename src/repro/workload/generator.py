@@ -1,12 +1,15 @@
 """Workload generation: request traces with configurable arrivals/lengths."""
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass
-from typing import Iterator, List, Optional, Sequence
+from typing import List, Optional
 
 import numpy as np
 
 from repro.core.request import Request
+
+ARRIVALS = ("poisson", "uniform", "burst", "closed")
 
 
 @dataclass
@@ -20,6 +23,13 @@ class WorkloadConfig:
     output: str = "lognormal"
     output_mean: int = 128
     output_max: int = 2048
+    # burst arrivals: bursts of burst_size requests every burst_period sec
+    burst_size: int = 32
+    burst_period: float = 1.0
+    # closed-loop arrivals: at most `concurrency` requests in flight; the
+    # next request is injected when a slot frees (controller-driven — the
+    # generator only stamps placeholder t=0 arrivals, re-stamped at run time)
+    concurrency: Optional[int] = None
     seed: int = 0
 
 
@@ -50,11 +60,19 @@ def generate(cfg: WorkloadConfig) -> List[Request]:
     elif cfg.arrival == "uniform":
         arrivals = np.sort(rng.uniform(0, n / cfg.rate, n))
     elif cfg.arrival == "burst":
-        arrivals = np.zeros(n)
+        # ramp of bursts: burst_size simultaneous requests every burst_period
+        size = max(int(cfg.burst_size), 1)
+        arrivals = (np.arange(n) // size) * max(cfg.burst_period, 0.0)
     elif cfg.arrival == "closed":
-        arrivals = np.zeros(n)          # closed-loop: all queued at t=0
+        if cfg.concurrency is not None and cfg.concurrency < 1:
+            raise ValueError(f"closed-loop concurrency must be >= 1, "
+                             f"got {cfg.concurrency}")
+        # placeholders: the controller injects request i+concurrency when
+        # request i completes (see GlobalController.submit_closed)
+        arrivals = np.zeros(n)
     else:
-        raise ValueError(cfg.arrival)
+        raise ValueError(f"unknown arrival process {cfg.arrival!r}; "
+                         f"known: {ARRIVALS}")
     plens = _lengths(cfg.prompt, cfg.prompt_mean, cfg.prompt_max, n, rng)
     olens = _lengths(cfg.output, cfg.output_mean, cfg.output_max, n, rng)
     return [Request(rid=i, arrival=float(arrivals[i]),
@@ -66,3 +84,35 @@ def fixed_batch(n: int, prompt_len: int, output_len: int) -> List[Request]:
     """The paper's Table-2 style workload: B requests, fixed lens, t=0."""
     return [Request(rid=i, arrival=0.0, prompt_len=prompt_len,
                     output_len=output_len) for i in range(n)]
+
+
+def load_trace(path: str, *, n_requests: Optional[int] = None) -> List[Request]:
+    """Replay a request trace from a JSONL file.
+
+    Each line is an object with ``prompt_len`` and ``output_len`` (ints)
+    and optionally ``arrival`` (seconds; missing -> 0.0).  Arrival times
+    are shifted so the trace starts at its earliest arrival.
+    """
+    rows = []
+    with open(path) as f:
+        for ln, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+                rows.append((float(obj.get("arrival", 0.0)),
+                             int(obj["prompt_len"]), int(obj["output_len"])))
+            except (ValueError, KeyError, TypeError) as e:
+                raise ValueError(
+                    f"{path}:{ln + 1}: bad trace record ({e}); expected "
+                    f'{{"arrival": float, "prompt_len": int, '
+                    f'"output_len": int}}') from e
+    if n_requests is not None:
+        rows = rows[:n_requests]
+    if not rows:
+        raise ValueError(f"{path}: empty trace")
+    t0 = min(a for a, _, _ in rows)
+    return [Request(rid=i, arrival=a - t0, prompt_len=p,
+                    output_len=max(o, 1))
+            for i, (a, p, o) in enumerate(sorted(rows))]

@@ -1,0 +1,392 @@
+"""Declarative experiment API: SimSpec round-trip, run/sweep, validation."""
+import json
+import os
+
+import pytest
+
+from repro.api import (
+    FaultSpec, ModelRef, PolicySpec, Report, SimSpec, SLOSpec, SpecError,
+    TopologySpec, WorkloadSpec, best_under_slo, expand, pareto, run, sweep,
+)
+from repro.api.cli import main as cli_main
+from repro.core import A800_SXM4_80G, ParallelismConfig, build_colocated
+from repro.core.policies.batching import (
+    BATCHING, ChunkedPrefill, resolve_batching,
+)
+from repro.core.policies.memory import MEMORY, resolve_memory
+from repro.core.policies.scheduling import SCHEDULERS, SJF, resolve_scheduler
+from repro.workload.generator import WorkloadConfig, generate, load_trace
+
+
+def small_spec(**kw):
+    base = dict(
+        model=ModelRef("qwen2-7b"),
+        topology=TopologySpec(preset="colocated", n_replicas=2),
+        workload=WorkloadSpec(n_requests=30, rate=20.0),
+        seed=0)
+    base.update(kw)
+    return SimSpec(**base)
+
+
+# ------------------------------------------------------------ round trip --
+def test_yaml_json_round_trip_equality():
+    spec = SimSpec(
+        model=ModelRef("mixtral-8x7b"),
+        topology=TopologySpec(preset="af", m=2, attn_tp=2, ffn_ep=8,
+                              remote_expert_ranks=[6, 7],
+                              expert_cluster_hw="H100-SXM",
+                              expert_link_bw=25e9,
+                              expert_link_latency=5e-6),
+        workload=WorkloadSpec(n_requests=50, arrival="burst",
+                              burst_size=10, burst_period=0.5),
+        policy=PolicySpec(router={"name": "zipf", "alpha": 1.1},
+                          scheduler="sjf"),
+        slo=SLOSpec(ttft_s=1.0, tpot_s=0.05),
+        faults=[FaultSpec(kind="straggler", cluster="decode",
+                          replica=0, slowdown=2.0)],
+        seed=7, name="rt")
+    assert SimSpec.from_yaml(spec.to_yaml()) == spec
+    assert SimSpec.from_json(spec.to_json()) == spec
+    assert SimSpec.from_dict(spec.to_dict()) == spec
+    # hash is stable across round trips
+    assert SimSpec.from_yaml(spec.to_yaml()).spec_hash() == spec.spec_hash()
+
+
+def test_inline_topology_round_trip(tmp_path):
+    spec = SimSpec(topology=TopologySpec(
+        preset=None,
+        clusters=[{"name": "pre", "role": "prefill", "n_replicas": 2},
+                  {"name": "dec", "role": "decode",
+                   "hardware": "H100-SXM"}],
+        links=[{"src": "pre", "dst": "dec", "bandwidth": 5e10}]))
+    p = tmp_path / "spec.yaml"
+    spec.save(str(p))
+    assert SimSpec.load(str(p)) == spec
+    pj = tmp_path / "spec.json"
+    spec.save(str(pj))
+    assert SimSpec.load(str(pj)) == spec
+
+
+# ------------------------------------------------------------ validation --
+def test_validation_unknown_model():
+    with pytest.raises(SpecError, match="unknown model"):
+        small_spec(model=ModelRef("gpt-17")).validate()
+
+
+def test_validation_bad_link_endpoint():
+    spec = small_spec(topology=TopologySpec(
+        preset=None,
+        clusters=[{"name": "a", "role": "colocated"}],
+        links=[{"src": "a", "dst": "nowhere", "bandwidth": 1e9}]))
+    with pytest.raises(SpecError, match="unknown cluster 'nowhere'"):
+        spec.validate()
+
+
+def test_validation_closed_loop_without_concurrency():
+    spec = small_spec(workload=WorkloadSpec(arrival="closed"))
+    with pytest.raises(SpecError, match="concurrency"):
+        spec.validate()
+
+
+def test_validation_unknown_names_and_fields():
+    with pytest.raises(SpecError, match="unknown router"):
+        small_spec(policy=PolicySpec(router="nope")).validate()
+    with pytest.raises(SpecError, match="unknown batching"):
+        small_spec(policy=PolicySpec(batching="nope")).validate()
+    with pytest.raises(SpecError, match="unknown preset"):
+        small_spec(topology=TopologySpec(preset="hybrid")).validate()
+    with pytest.raises(SpecError, match="unknown field"):
+        SimSpec.from_dict({"modle": {"name": "qwen2-7b"}})
+    with pytest.raises(SpecError, match="unknown field"):
+        SimSpec.from_dict({"workload": {"ratee": 4.0}})
+    with pytest.raises(SpecError, match="unknown fault kind"):
+        small_spec(faults=[FaultSpec(kind="meteor",
+                                     cluster="colocated")]).validate()
+    with pytest.raises(SpecError, match="unknown cluster"):
+        small_spec(faults=[FaultSpec(cluster="decode")]).validate()
+
+
+def test_set_path_through_none_fields_and_coercion():
+    # dotted paths must create None-valued sub-specs (slo defaults to None)
+    spec = small_spec().with_(**{"slo.ttft_s": 0.5})
+    assert spec.slo.ttft_s == 0.5 and spec.slo.tpot_s == 0.1
+    # scalar parents are an error, not silent data loss
+    s = small_spec(policy=PolicySpec(batching="continuous"))
+    with pytest.raises(SpecError, match="not a mapping"):
+        s.with_(**{"policy.batching.chunk": 256})
+    # YAML 1.1 exponent strings coerce everywhere, including `until`
+    spec = SimSpec.from_dict({"until": "1.5e3",
+                              "topology": {"transfer_bw": "2.5e10"}})
+    assert spec.until == 1500.0
+    assert spec.topology.transfer_bw == 2.5e10
+    spec.validate()
+
+
+def test_role_keyed_batching_rejects_unknown_keys():
+    spec = small_spec(policy=PolicySpec(batching={"decod": "static"}))
+    with pytest.raises(SpecError, match="unknown role/cluster"):
+        spec.validate()
+    ok = small_spec(topology=TopologySpec(preset="pd"),
+                    policy=PolicySpec(batching={
+                        "decode": {"name": "chunked_prefill", "chunk": 64}}))
+    ok.validate()
+
+
+def test_arrivals_single_source_of_truth():
+    from repro.api.spec import ARRIVALS as api_arrivals
+    from repro.workload.generator import ARRIVALS as gen_arrivals
+    assert api_arrivals is gen_arrivals
+
+
+def test_remote_ranks_validated_against_ep():
+    spec = small_spec(topology=TopologySpec(
+        preset="af", ffn_ep=4, remote_expert_ranks=[3, 9]))
+    with pytest.raises(SpecError, match="out of range"):
+        spec.validate()
+
+
+# --------------------------------------------------------- run -> Report --
+def test_run_deterministic_and_matches_legacy_builders():
+    spec = small_spec()
+    r1, r2 = run(spec), run(spec)
+    assert r1.summary == r2.summary            # bit-identical
+    assert r1.spec_hash == r2.spec_hash
+    legacy = build_colocated(
+        __import__("repro.configs", fromlist=["get_config"])
+        .get_config("qwen2-7b"), A800_SXM4_80G, n_replicas=2,
+        par=ParallelismConfig(tp=1), seed=0).run(
+            generate(WorkloadConfig(n_requests=30, rate=20.0, seed=0)))
+    assert r1.summary == legacy                # faithful wrapper
+    assert r1.all_complete
+    assert r1.conservation == {"complete": 30}
+    assert r1.n_devices == 2
+    assert r1.sim_events > 0 and r1.wall_clock_s > 0
+    assert "e2e_p50_s" in r1.summary and "queue_p99_s" in r1.summary
+
+
+def test_report_serializes():
+    rep = run(small_spec(name="ser"))
+    d = json.loads(rep.to_json())
+    rep2 = Report.from_dict(d)
+    assert rep2.summary == rep.summary
+    assert rep2.name == "ser"
+    assert rep2.clusters["colocated"]["n_replicas"] == 2
+
+
+def test_af_report_carries_ep_fields():
+    spec = SimSpec(
+        model=ModelRef("mixtral-8x7b"),
+        topology=TopologySpec(preset="af", attn_tp=2, ffn_ep=8,
+                              remote_expert_ranks=[7],
+                              expert_link_bw=25e9),
+        policy=PolicySpec(router="zipf"),
+        workload=WorkloadSpec(n_requests=8, rate=20.0), seed=1)
+    rep = run(spec)
+    af = rep.clusters["decode"]["af"]
+    assert af["decode_steps"] > 0
+    assert af["ep_straggler_excess_s"] > 0
+    assert af["cross_cluster_bytes"] > 0
+
+
+def test_faults_via_spec():
+    spec = small_spec(faults=[
+        FaultSpec(kind="failure", cluster="colocated", replica=0,
+                  at=0.2, downtime=1.0),
+        FaultSpec(kind="straggler", cluster="colocated", replica=1,
+                  slowdown=2.0)])
+    rep = run(spec)
+    assert rep.all_complete
+    healthy = run(small_spec())
+    assert rep["duration_s"] >= healthy["duration_s"]
+
+
+# ---------------------------------------------------------------- sweeps --
+def test_expand_grid_and_zip():
+    base = small_spec()
+    pts = expand(base, {"topology.tp": [1, 2], "workload.rate": [5, 10]})
+    assert len(pts) == 4
+    assert [p for _, p in pts] == [
+        {"topology.tp": 1, "workload.rate": 5},
+        {"topology.tp": 1, "workload.rate": 10},
+        {"topology.tp": 2, "workload.rate": 5},
+        {"topology.tp": 2, "workload.rate": 10}]
+    assert pts[2][0].topology.tp == 2 and pts[2][0].workload.rate == 5
+    zipped = expand(base, {"topology.tp": [1, 2],
+                           "workload.rate": [5, 10]}, mode="zip")
+    assert [p for _, p in zipped] == [
+        {"topology.tp": 1, "workload.rate": 5},
+        {"topology.tp": 2, "workload.rate": 10}]
+    with pytest.raises(SpecError, match="equal-length"):
+        expand(base, {"topology.tp": [1, 2],
+                      "workload.rate": [5]}, mode="zip")
+    # shorthand axis names resolve into sections
+    assert expand(base, {"tp": [4]})[0][0].topology.tp == 4
+    with pytest.raises(SpecError, match="dotted path"):
+        expand(base, {"warp": [1]})
+
+
+def test_sweep_parallel_matches_serial_and_streams(tmp_path):
+    base = small_spec(workload=WorkloadSpec(n_requests=20, rate=20.0))
+    axes = {"topology.tp": [1, 2], "seed": [0, 1]}
+    jsonl = str(tmp_path / "sweep.jsonl")
+    serial = sweep(base, axes)
+    par = sweep(base, axes, jobs=2, jsonl=jsonl)
+    assert [r.summary for r in serial] == [r.summary for r in par]
+    assert [r.point for r in serial] == [r.point for r in par]
+    lines = [json.loads(l) for l in open(jsonl)]
+    assert len(lines) == 4
+    assert {json.dumps(l["point"], sort_keys=True) for l in lines} == \
+        {json.dumps(r.point, sort_keys=True) for r in par}
+
+
+def test_sweep_per_point_seed_independence():
+    base = small_spec()        # workload.seed=None -> SimSpec.seed
+    reps = sweep(base, {}, seeds=[0, 1], jobs=2)
+    assert reps[0].summary != reps[1].summary
+    # each point is bit-identical to an isolated run with that seed
+    assert reps[0].summary == run(base.with_(seed=0)).summary
+    assert reps[1].summary == run(base.with_(seed=1)).summary
+
+
+def test_pareto_and_best_under_slo():
+    base = small_spec(workload=WorkloadSpec(n_requests=20, rate=20.0))
+    reps = sweep(base, {"topology.tp": [1, 2]})
+    front = pareto(reps)
+    assert front and set(id(r) for r in front) <= set(id(r) for r in reps)
+    best = best_under_slo(reps, ttft_p99=100.0, tpot_p99=100.0)
+    assert best is not None
+    assert best_under_slo(reps, ttft_p99=1e-12) is None
+
+
+# ------------------------------------------------- workload satellites --
+def test_burst_arrivals_ramp():
+    reqs = generate(WorkloadConfig(n_requests=25, arrival="burst",
+                                   burst_size=10, burst_period=2.0))
+    arrivals = [r.arrival for r in reqs]
+    assert arrivals[:10] == [0.0] * 10
+    assert arrivals[10:20] == [2.0] * 10
+    assert arrivals[20:] == [4.0] * 5
+
+
+def test_closed_loop_respects_concurrency():
+    spec = small_spec(
+        topology=TopologySpec(preset="colocated", n_replicas=1),
+        workload=WorkloadSpec(n_requests=24, arrival="closed",
+                              concurrency=4))
+    rep = run(spec)
+    assert rep.all_complete
+    # reconstruct in-flight count over time from the run? The report can't
+    # see requests, so re-run via the builder to inspect them.
+    from repro.api.run import build
+    handle = build(spec)
+    reqs = spec.workload.build_requests(spec.seed)
+    handle.run(reqs, closed_concurrency=4)
+    events = []
+    for r in reqs:
+        assert r.finish_time is not None
+        events.append((r.arrival, 1))
+        events.append((r.finish_time, -1))
+    in_flight = peak = 0
+    for _, delta in sorted(events, key=lambda e: (e[0], e[1])):
+        in_flight += delta
+        peak = max(peak, in_flight)
+    assert peak <= 4
+    # later arrivals were injected on completions, not at t=0
+    assert sum(1 for r in reqs if r.arrival == 0.0) == 4
+
+
+def test_trace_replay_and_metrics_anchoring(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    with open(path, "w") as f:
+        for i in range(10):
+            f.write(json.dumps({"arrival": 100.0 + 0.05 * i,
+                                "prompt_len": 64,
+                                "output_len": 8}) + "\n")
+    reqs = load_trace(str(path))
+    assert reqs[0].arrival == 0.0          # shifted to trace start
+    spec = small_spec(workload=WorkloadSpec(trace=str(path),
+                                            n_requests=10))
+    rep = run(spec)
+    assert rep.all_complete
+    # duration measured from the first arrival, not t=0
+    assert rep["duration_s"] < 10.0
+    with pytest.raises(ValueError, match="bad trace record"):
+        bad = tmp_path / "bad.jsonl"
+        bad.write_text('{"prompt_len": 1}\n')
+        load_trace(str(bad))
+
+
+def test_metrics_start_anchored_to_first_arrival():
+    # identical workload shifted by +50s must report identical duration
+    spec_a = small_spec(workload=WorkloadSpec(n_requests=10, rate=10.0))
+    rep_a = run(spec_a)
+    from repro.api.run import build
+    handle = build(spec_a)
+    reqs = spec_a.workload.build_requests(0)
+    for r in reqs:
+        r.arrival += 50.0
+    rep_b = handle.run(reqs)
+    assert rep_b["duration_s"] == pytest.approx(rep_a["duration_s"],
+                                                rel=1e-9)
+
+
+# ------------------------------------------------------------ registries --
+def test_policy_registries_resolve_uniformly():
+    assert set(BATCHING) == {"continuous", "chunked_prefill", "static"}
+    pol = resolve_batching({"name": "chunked_prefill", "chunk": 128})
+    assert isinstance(pol, ChunkedPrefill) and pol.chunk == 128
+    assert resolve_batching(pol) is pol
+    with pytest.raises(KeyError, match="registered"):
+        resolve_batching("nope")
+    assert set(SCHEDULERS) == {"fcfs", "sjf", "priority"}
+    assert isinstance(resolve_scheduler("sjf"), SJF)
+    with pytest.raises(KeyError):
+        resolve_scheduler("lifo")
+    assert set(MEMORY) == {"paged", "monolithic"}
+    cls, kw = resolve_memory({"name": "paged", "block_tokens": 32})
+    assert kw == {"block_tokens": 32}
+    with pytest.raises(KeyError):
+        resolve_memory("infinite")
+
+
+def test_policy_spec_selects_scheduler_and_memory():
+    spec = small_spec(policy=PolicySpec(
+        scheduler="sjf", memory={"name": "paged", "block_tokens": 32},
+        batching={"name": "static", "batch_size": 4}))
+    from repro.api.run import build
+    handle = build(spec)
+    w = handle.clusters["colocated"].replicas[0]
+    assert isinstance(w.queue_policy, SJF)
+    assert w.memory.block_tokens == 32
+    assert w.policy.name == "static"
+    assert run(spec).all_complete
+
+
+# ------------------------------------------------------------------- CLI --
+def test_cli_run_and_sweep(tmp_path, capsys):
+    spec_path = tmp_path / "s.yaml"
+    small_spec(name="cli-test",
+               workload=WorkloadSpec(n_requests=10, rate=10.0)
+               ).save(str(spec_path))
+    out = str(tmp_path / "artifacts")
+    assert cli_main(["run", str(spec_path), "-o", out,
+                     "--set", "workload.rate=20"]) == 0
+    rep = json.load(open(os.path.join(out, "cli-test.report.json")))
+    assert rep["summary"]["n_completed"] == 10
+    assert rep["spec"]["workload"]["rate"] == 20
+    assert cli_main(["sweep", str(spec_path), "--axis",
+                     "topology.n_replicas=1,2", "--jobs", "2",
+                     "-o", out]) == 0
+    lines = [json.loads(l) for l in
+             open(os.path.join(out, "cli-test.sweep.jsonl"))]
+    assert len(lines) == 2
+    assert cli_main(["list"]) == 0
+    assert "models" in capsys.readouterr().out
+    assert cli_main(["run", str(tmp_path / "missing.yaml")]) == 2
+
+
+def test_cli_rejects_bad_spec(tmp_path, capsys):
+    p = tmp_path / "bad.yaml"
+    p.write_text("model:\n  name: not-a-model\n")
+    assert cli_main(["run", str(p)]) == 2
+    assert "unknown model" in capsys.readouterr().err
