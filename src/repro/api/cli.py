@@ -25,6 +25,7 @@ SUMMARY_KEYS = (
     "throughput_tok_s_per_device", "ttft_p50_s", "ttft_p99_s",
     "tpot_p50_s", "tpot_p99_s", "e2e_p50_s", "e2e_p99_s",
     "queue_p50_s", "queue_p99_s", "goodput_tok_s", "slo_attainment",
+    "bubble_time_s", "overlap_efficiency",
 )
 
 
@@ -70,7 +71,7 @@ def _print_summary(rep: Report, file=sys.stdout) -> None:
     print(f"# {label}  (devices={rep.n_devices}, events={rep.sim_events}, "
           f"wall={rep.wall_clock_s:.2f}s)", file=file)
     for k in SUMMARY_KEYS:
-        if k in rep.summary:
+        if rep.summary.get(k) is not None:   # empty-sample stats are None
             print(f"  {k:30s} {rep.summary[k]:14.6g}", file=file)
     if not rep.all_complete:
         print(f"  WARNING: incomplete — conservation: {rep.conservation}",
@@ -111,8 +112,10 @@ def _cmd_sweep(args: argparse.Namespace) -> int:
 
     def progress(done: int, total: int, rep: Report) -> None:
         tag = json.dumps(rep.point) if rep.point else rep.spec_hash
-        thr = rep.summary.get("throughput_tok_s_per_device", float("nan"))
-        tpot = rep.summary.get("tpot_p50_s", float("nan")) * 1e3
+        thr = rep.summary.get("throughput_tok_s_per_device")
+        tpot = rep.summary.get("tpot_p50_s")
+        thr = float("nan") if thr is None else thr
+        tpot = float("nan") if tpot is None else tpot * 1e3
         print(f"[{done}/{total}] {tag}  tok/s/dev={thr:.1f}  "
               f"tpot_p50={tpot:.2f}ms", flush=True)
 
@@ -132,6 +135,7 @@ def _cmd_list(args: argparse.Namespace) -> int:
     from repro.configs import REGISTRY
     from repro.core.hardware import HARDWARE
     from repro.core.opmodels import OPMODELS
+    from repro.core.pipeline import PIPELINES
     from repro.core.policies.batching import BATCHING
     from repro.core.policies.memory import MEMORY
     from repro.core.policies.scheduling import SCHEDULERS
@@ -147,6 +151,7 @@ def _cmd_list(args: argparse.Namespace) -> int:
         "queue policies": sorted(SCHEDULERS),
         "memory managers": sorted(MEMORY),
         "operator models": sorted(OPMODELS),
+        "pipeline presets": sorted(PIPELINES),
     }
     want = getattr(args, "what", None)
     for title, names in sections.items():

@@ -83,9 +83,11 @@ def build(spec: SimSpec, *,
     if ops is None:
         ops = resolve_opmodels(spec.opmodel.name, hw)
     pol = spec.policy
+    pipeline = spec.pipeline.to_config() if spec.pipeline is not None \
+        else None
     common = dict(ops=ops, routing=pol.router, seed=spec.seed,
                   memory=pol.memory, queue_policy=pol.scheduler,
-                  memoize=topo.memoize)
+                  memoize=topo.memoize, pipeline=pipeline)
 
     def batching(role: str, name: str = ""):
         try:
@@ -168,6 +170,17 @@ def _cluster_breakdown(handle: SystemHandle) -> Dict[str, Dict[str, Any]]:
                 for k, v in totals.items():
                     af[k] = af.get(k, 0) + v
         if af:
+            makespan = af.get("makespan_s", 0.0)
+            serial = af.get("serial_makespan_s", 0.0)
+            # latency-hiding derived observables: how much of the serial
+            # chain was hidden, and the comm time each stage had exposed
+            if serial > 0:
+                af["overlap_efficiency"] = max(1.0 - makespan / serial, 0.0)
+            if makespan > 0:
+                af["attn_exposed_comm_frac"] = \
+                    af.get("attn_exposed_comm_s", 0.0) / makespan
+                af["ffn_exposed_comm_frac"] = \
+                    af.get("ffn_exposed_comm_s", 0.0) / makespan
             info["af"] = af
         out[name] = info
     return out
@@ -202,12 +215,24 @@ def run(spec: SimSpec, *,
         slo_tpot=spec.slo.tpot_s if spec.slo else None)
     wall = time.perf_counter() - t0
     conservation = handle.controller.conservation_check()
+    clusters = _cluster_breakdown(handle)
+    # lift aggregate latency-hiding observables into the summary (AF
+    # event-graph clusters book both actual and serial makespans)
+    makespan = sum(c["af"].get("makespan_s", 0.0)
+                   for c in clusters.values() if "af" in c)
+    serial = sum(c["af"].get("serial_makespan_s", 0.0)
+                 for c in clusters.values() if "af" in c)
+    if serial > 0:
+        summary["bubble_time_s"] = sum(c["af"].get("bubble_time_s", 0.0)
+                                       for c in clusters.values()
+                                       if "af" in c)
+        summary["overlap_efficiency"] = max(1.0 - makespan / serial, 0.0)
     return Report(
         name=spec.name,
         spec=spec.to_dict(),
         spec_hash=spec.spec_hash(),
         summary=summary,
-        clusters=_cluster_breakdown(handle),
+        clusters=clusters,
         conservation=conservation,
         all_complete=(conservation == {"complete": len(requests)}),
         n_devices=handle.n_devices,

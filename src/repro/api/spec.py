@@ -31,6 +31,9 @@ from repro.configs import REGISTRY
 from repro.core.hardware import HARDWARE, HardwareSpec, LinkSpec, \
     ParallelismConfig
 from repro.core.opmodels import OPMODELS
+from repro.core.pipeline import (
+    AF_OVERLAP_MODES, PIPELINES, PipelineConfig, resolve_pipeline,
+)
 from repro.core.policies.batching import resolve_batching
 from repro.core.policies.memory import resolve_memory
 from repro.core.policies.scheduling import resolve_scheduler
@@ -102,7 +105,7 @@ _CLUSTER_KEYS = {
     "name", "role", "n_replicas", "tp", "pp", "ep", "hardware", "step",
     "m", "attn_tp", "ffn_tp", "ffn_ep", "remote_expert_ranks",
     "expert_cluster_hw", "expert_link_bw", "expert_link_latency",
-    "batching", "seed_offset", "replica_prefix", "memoize",
+    "batching", "seed_offset", "replica_prefix", "memoize", "pipeline",
 }
 _LINK_KEYS = {"src", "dst", "bandwidth", "latency"}
 
@@ -239,6 +242,10 @@ class TopologySpec:
                     else (batching(c["role"], name) if batching else None))
             except (KeyError, TypeError) as e:
                 raise SpecError(f"{path}.batching: {e}") from e
+            try:
+                pipe = resolve_pipeline(c.get("pipeline"))
+            except (KeyError, TypeError, ValueError) as e:
+                raise SpecError(f"{path}.pipeline: {e}") from e
             clusters.append(ClusterSpec(
                 name=name, role=c["role"],
                 n_replicas=int(c.get("n_replicas", 1)), par=par,
@@ -255,7 +262,8 @@ class TopologySpec:
                 expert_link=link,
                 seed_offset=int(c.get("seed_offset", 100 * i)),
                 replica_prefix=c.get("replica_prefix"),
-                memoize=bool(c.get("memoize", self.memoize))))
+                memoize=bool(c.get("memoize", self.memoize)),
+                pipeline=pipe))
         links = []
         for i, l in enumerate(self.links or []):
             path = f"topology.links[{i}]"
@@ -393,6 +401,64 @@ class PolicySpec:
 
 
 @dataclass
+class PipelineSpec:
+    """Latency-hiding pipelining strategy (see ``repro.core.pipeline``).
+
+    ``preset`` starts from a registered strategy (``"serial"``,
+    ``"two_batch"``, ``"chunked_prefill"``, ``"ep_overlap"``,
+    ``"full_overlap"``); explicitly-set fields override it.  With no
+    preset the fields stand alone.  A spec with ``pipeline: null`` (the
+    default) keeps the legacy serial-per-micro-batch model bit-for-bit.
+
+    - ``af_overlap``: AF decode-step resource model — ``"none"`` (legacy),
+      ``"serial"`` (no-latency-hiding baseline), ``"two_batch"``
+      (ping-pong with per-direction NIC lanes).
+    - ``chunked_prefill`` / ``prefill_chunk``: Sarathi-style chunked
+      prefill with piggybacked decode on colocated and PD prefill pools.
+    - ``ep_overlap``: EP dispatch/combine comm-compute overlap efficiency.
+    """
+    preset: Optional[str] = None
+    af_overlap: Optional[str] = None      # None -> preset / "none"
+    nic_lanes: Optional[int] = None
+    chunked_prefill: Optional[bool] = None
+    prefill_chunk: Optional[int] = None
+    ep_overlap: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        _coerce(self, int, "nic_lanes", "prefill_chunk")
+        _coerce(self, float, "ep_overlap")
+
+    def to_config(self) -> PipelineConfig:
+        overrides = {k: v for k, v in (
+            ("af_overlap", self.af_overlap),
+            ("nic_lanes", self.nic_lanes),
+            ("chunked_prefill", self.chunked_prefill),
+            ("prefill_chunk", self.prefill_chunk),
+            ("ep_overlap", self.ep_overlap)) if v is not None}
+        # one merge implementation: resolve_pipeline raises on unknown
+        # presets rather than silently compiling to the no-op config
+        if self.preset is not None:
+            return resolve_pipeline({"name": self.preset, **overrides})
+        return resolve_pipeline(overrides) if overrides \
+            else PipelineConfig()
+
+    def validate(self) -> None:
+        if self.preset is not None and self.preset not in PIPELINES:
+            raise SpecError(f"pipeline.preset: unknown preset "
+                            f"{self.preset!r}; available: "
+                            f"{sorted(PIPELINES)}")
+        if self.af_overlap is not None \
+                and self.af_overlap not in AF_OVERLAP_MODES:
+            raise SpecError(f"pipeline.af_overlap: unknown mode "
+                            f"{self.af_overlap!r}; available: "
+                            f"{AF_OVERLAP_MODES}")
+        try:
+            self.to_config().validate()
+        except (KeyError, ValueError) as e:
+            raise SpecError(f"pipeline: {e}") from e
+
+
+@dataclass
 class OpModelSpec:
     """Operator-model family for the ExecutionPredictor."""
     name: str = "analytical"
@@ -456,6 +522,7 @@ class SimSpec:
     workload: WorkloadSpec = field(default_factory=WorkloadSpec)
     policy: PolicySpec = field(default_factory=PolicySpec)
     opmodel: OpModelSpec = field(default_factory=OpModelSpec)
+    pipeline: Optional[PipelineSpec] = None
     slo: Optional[SLOSpec] = None
     faults: List[FaultSpec] = field(default_factory=list)
     seed: int = 0
@@ -473,6 +540,8 @@ class SimSpec:
         self.workload.validate()
         self.policy.validate()
         self.opmodel.validate()
+        if self.pipeline is not None:
+            self.pipeline.validate()
         if self.slo is not None:
             self.slo.validate()
         names = self.topology.cluster_names()
@@ -519,6 +588,10 @@ class SimSpec:
             or PolicySpec(),
             opmodel=_from_mapping(OpModelSpec, d.get("opmodel"), "opmodel")
             or OpModelSpec(),
+            pipeline=(PipelineSpec(preset=d["pipeline"])
+                      if isinstance(d.get("pipeline"), str) else
+                      _from_mapping(PipelineSpec, d.get("pipeline"),
+                                    "pipeline")),
             slo=_from_mapping(SLOSpec, d.get("slo"), "slo"),
             faults=[_from_mapping(FaultSpec, f, f"faults[{i}]")
                     for i, f in enumerate(d.get("faults") or [])],
@@ -582,7 +655,7 @@ def set_path(d: Dict[str, Any], path: str, value: Any) -> None:
     topology / workload / policy."""
     parts = path.split(".")
     if len(parts) == 1 and parts[0] not in d:
-        for section in ("topology", "workload", "policy"):
+        for section in ("topology", "workload", "policy", "pipeline"):
             sub = d.get(section)
             if isinstance(sub, Mapping) and parts[0] in sub:
                 parts = [section, parts[0]]

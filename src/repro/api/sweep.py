@@ -163,12 +163,17 @@ def best_under_slo(reports: Sequence[Report], *,
     for r in reports:
         if require_complete and not r.all_complete:
             continue
-        if ttft_p99 is not None and not r.summary.get("ttft_p99_s",
-                                                      9e9) <= ttft_p99:
+        ttft = r.summary.get("ttft_p99_s")
+        tpot = r.summary.get("tpot_p99_s")
+        if ttft_p99 is not None and not (ttft is not None
+                                         and ttft <= ttft_p99):
             continue
-        if tpot_p99 is not None and not r.summary.get("tpot_p99_s",
-                                                      9e9) <= tpot_p99:
+        if tpot_p99 is not None and not (tpot is not None
+                                         and tpot <= tpot_p99):
             continue
         ok.append(r)
-    return max(ok, key=lambda r: r.summary.get(key, float("-inf")),
-               default=None)
+
+    def _key(r: Report) -> float:
+        v = r.summary.get(key)
+        return float("-inf") if v is None else v
+    return max(ok, key=_key, default=None)

@@ -14,6 +14,9 @@ from repro.core.topology import (  # noqa: F401
     ClusterSpec, StageGraph, SystemHandle, build_system,
 )
 from repro.core.routing import ROUTERS, resolve_router  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    PIPELINES, PipelineConfig, resolve_pipeline,
+)
 from repro.core.workflows.colocated import build_colocated  # noqa: F401
 from repro.core.workflows.pd_disagg import build_pd  # noqa: F401
 from repro.core.workflows.af_disagg import (  # noqa: F401

@@ -36,7 +36,7 @@ class ReplicaWorker:
                  predictor: ExecutionPredictor, policy: BatchingPolicy,
                  memory: Optional[PagedKVManager], hooks: Hooks, *,
                  role: str = "colocated", queue_policy: Optional[QueuePolicy] = None,
-                 slowdown: float = 1.0):
+                 slowdown: float = 1.0, pipeline=None):
         self.engine = engine
         self.name = name
         self.predictor = predictor
@@ -45,6 +45,7 @@ class ReplicaWorker:
         self.hooks = hooks
         self.role = role
         self.queue_policy = queue_policy or FCFS()
+        self.pipeline = pipeline          # PipelineConfig (latency hiding)
         self.slowdown = slowdown          # straggler factor (1.0 = healthy)
         self.waiting: List[Request] = []
         self.running: List[Request] = []  # decoding requests resident here
@@ -79,8 +80,23 @@ class ReplicaWorker:
         if plan.empty:
             return
         self.busy = True
-        bd = self.predictor.step_time(plan.q_lens, plan.kv_lens,
-                                      decode=(not plan.prefill))
+        if (self.pipeline is not None and self.pipeline.chunked_prefill
+                and plan.prefill and plan.decode):
+            # chunked prefill with piggybacked decode: the mixed batch is
+            # priced as ONE fused step — prefill attention for the chunks,
+            # decode attention for the piggybacked rows, shared GEMMs.
+            # Deliberately gated on the pipeline flag, NOT the batch shape:
+            # a bare ChunkedPrefill batching policy (no PipelineSpec) keeps
+            # the legacy all-prefill pricing bit-for-bit; fused per-class
+            # pricing is opt-in via PipelineSpec(chunked_prefill=True)
+            bd = self.predictor.step_time(plan.q_lens, plan.kv_lens,
+                                          decode=False,
+                                          n_prefill=len(plan.prefill))
+            self.stats["piggyback_tokens"] = (
+                self.stats.get("piggyback_tokens", 0) + len(plan.decode))
+        else:
+            bd = self.predictor.step_time(plan.q_lens, plan.kv_lens,
+                                          decode=(not plan.prefill))
         t = bd.total * self.slowdown
         self.stats["batches"] += 1
         self.stats["busy_time"] += t

@@ -9,8 +9,14 @@ import numpy as np
 from repro.core.request import Request
 
 
-def _pct(xs: Sequence[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+def _pct(xs: Sequence[float], q: float) -> Optional[float]:
+    # None (JSON null), NOT nan: a bare NaN literal makes the report an
+    # invalid JSON document, silently breaking CLI/sweep artifacts
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else None
+
+
+def _mean(xs: Sequence[float]) -> Optional[float]:
+    return float(np.mean(xs)) if len(xs) else None
 
 
 @dataclass
@@ -34,7 +40,10 @@ class MetricsCollector:
     # ------------------------------------------------------------- report --
     def report(self, *, n_devices: int = 1,
                slo_ttft: Optional[float] = None,
-               slo_tpot: Optional[float] = None) -> Dict[str, float]:
+               slo_tpot: Optional[float] = None
+               ) -> Dict[str, Optional[float]]:
+        """Summary metrics; empty-sample statistics are ``None`` (JSON
+        null), never NaN — reports must stay valid JSON."""
         start = self.start
         if start is None:       # no arrival was ever observed
             start = min((r.arrival for r in self.completed), default=0.0)
@@ -50,13 +59,13 @@ class MetricsCollector:
             "duration_s": dur,
             "throughput_tok_s": out_tokens / dur,
             "throughput_tok_s_per_device": out_tokens / dur / max(n_devices, 1),
-            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else float("nan"),
+            "ttft_mean_s": _mean(ttfts),
             "ttft_p50_s": _pct(ttfts, 50), "ttft_p99_s": _pct(ttfts, 99),
-            "tpot_mean_s": float(np.mean(tpots)) if tpots else float("nan"),
+            "tpot_mean_s": _mean(tpots),
             "tpot_p50_s": _pct(tpots, 50), "tpot_p99_s": _pct(tpots, 99),
-            "e2e_mean_s": float(np.mean(e2es)) if e2es else float("nan"),
+            "e2e_mean_s": _mean(e2es),
             "e2e_p50_s": _pct(e2es, 50), "e2e_p99_s": _pct(e2es, 99),
-            "queue_mean_s": float(np.mean(queues)) if queues else float("nan"),
+            "queue_mean_s": _mean(queues),
             "queue_p50_s": _pct(queues, 50), "queue_p99_s": _pct(queues, 99),
         }
         if slo_ttft is not None and slo_tpot is not None and self.completed:

@@ -79,10 +79,14 @@ class ExecutionPredictor:
 
     # -------------------------------------------------------------- caching --
     def _cache_key(self, q_lens: Sequence[int], kv_lens: Sequence[int],
-                   decode: bool) -> Tuple:
+                   decode: bool, n_prefill: Optional[int] = None) -> Tuple:
         sq, skv = int(sum(q_lens)), int(sum(kv_lens))
         mkv = int(max(kv_lens, default=0))
         base = (decode, len(q_lens), _qtz(sq), _qtz(skv), _qtz(mkv))
+        if n_prefill is not None:
+            # mixed chunked-prefill step: keyed apart from pure steps (the
+            # tuple is longer, so mixed keys can never alias pure ones)
+            base = base + ("mix", n_prefill)
         # rotate stochastic-routing draws per bucket (not per call, which
         # would alias with periodic prefill/decode interleavings)
         n = self._bucket_calls.get(base, 0)
@@ -106,7 +110,8 @@ class ExecutionPredictor:
     # ------------------------------------------------------------- layers --
     def _attn_layer(self, kind: str, q_lens: Sequence[int],
                     kv_lens: Sequence[int], decode: bool,
-                    bd: StepBreakdown) -> None:
+                    bd: StepBreakdown,
+                    n_prefill: Optional[int] = None) -> None:
         cfg, par, ops = self.cfg, self.par, self.ops
         tp = max(par.tp, 1)
         d, hd = cfg.d_model, cfg.resolved_head_dim
@@ -116,7 +121,19 @@ class ExecutionPredictor:
 
         # projections (TP-sharded over heads)
         bd.add("qkv_gemm", ops.gemm(toks, (H + 2 * K) * hd // tp, d))
-        if decode:
+        if n_prefill is not None:
+            # mixed chunked-prefill step: prefill-chunk rows run the prefill
+            # attention kernel, piggybacked decode rows the decode kernel —
+            # the fused batch shares every GEMM but not the attention math
+            if n_prefill:
+                bd.add("attn", ops.attention_prefill(
+                    q_lens[:n_prefill], kv_lens[:n_prefill], H // tp,
+                    max(K // tp, 1), hd, causal=True, window=window))
+            if len(q_lens) > n_prefill:
+                bd.add("attn", ops.attention_decode(
+                    kv_lens[n_prefill:], H // tp, max(K // tp, 1), hd,
+                    window=window))
+        elif decode:
             bd.add("attn", ops.attention_decode(
                 kv_lens, H // tp, max(K // tp, 1), hd, window=window))
         else:
@@ -190,11 +207,15 @@ class ExecutionPredictor:
 
     # -------------------------------------------------------------- steps --
     def step_time(self, q_lens: Sequence[int], kv_lens: Sequence[int], *,
-                  decode: bool) -> StepBreakdown:
+                  decode: bool,
+                  n_prefill: Optional[int] = None) -> StepBreakdown:
         """One full model step for a (micro-)batch on one PP stage set.
 
         q_lens: new tokens per request (1s for decode; prompt lens/chunks for
         prefill).  kv_lens: context lengths (== q_lens for fresh prefill).
+        ``n_prefill`` marks a *mixed* chunked-prefill step: the first
+        ``n_prefill`` rows are prefill chunks, the rest piggybacked decode
+        tokens — attention is priced per class, GEMMs over the fused batch.
 
         Results are memoized on a quantized batch-shape key (~5% geometric
         buckets on token totals): two batches in the same bucket replay the
@@ -204,8 +225,9 @@ class ExecutionPredictor:
         ``memoize=False`` for exact per-step sampling.
         """
         if self._cache is None:
-            return self._step_time_impl(q_lens, kv_lens, decode=decode)
-        key = self._cache_key(q_lens, kv_lens, decode)
+            return self._step_time_impl(q_lens, kv_lens, decode=decode,
+                                        n_prefill=n_prefill)
+        key = self._cache_key(q_lens, kv_lens, decode, n_prefill)
         bd = self._cache.get(key)
         if bd is not None:
             self._cache.move_to_end(key)
@@ -213,14 +235,16 @@ class ExecutionPredictor:
             self._on_cache_hit(bd)
             return bd
         self.cache_misses += 1
-        bd = self._step_time_impl(q_lens, kv_lens, decode=decode)
+        bd = self._step_time_impl(q_lens, kv_lens, decode=decode,
+                                  n_prefill=n_prefill)
         self._cache[key] = bd
         if len(self._cache) > self._cache_size:
             self._cache.popitem(last=False)
         return bd
 
     def _step_time_impl(self, q_lens: Sequence[int], kv_lens: Sequence[int],
-                        *, decode: bool) -> StepBreakdown:
+                        *, decode: bool,
+                        n_prefill: Optional[int] = None) -> StepBreakdown:
         cfg = self.cfg
         bd = StepBreakdown()
         toks = int(sum(q_lens))
@@ -231,7 +255,8 @@ class ExecutionPredictor:
         bd.add("embed", self.ops.membound(2.0 * toks * cfg.d_model))
         for kind in cfg.pattern:
             if kind in (ATTN_GLOBAL, ATTN_LOCAL):
-                self._attn_layer(kind, q_lens, kv_lens, decode, bd)
+                self._attn_layer(kind, q_lens, kv_lens, decode, bd,
+                                 n_prefill=n_prefill)
                 if cfg.moe is not None:
                     self._moe_ffn(toks, bd)
                 else:

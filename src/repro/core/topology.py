@@ -39,7 +39,10 @@ from repro.core.engine import SimEngine
 from repro.core.hardware import HardwareSpec, LinkSpec, ParallelismConfig
 from repro.core.metrics import MetricsCollector
 from repro.core.opmodels.analytical import OperatorModelSet
-from repro.core.policies.batching import BatchingPolicy, ContinuousBatching
+from repro.core.pipeline import PipelineConfig, resolve_pipeline
+from repro.core.policies.batching import (
+    BatchingPolicy, ChunkedPrefill, ContinuousBatching,
+)
 from repro.core.predictor import ExecutionPredictor
 from repro.core.request import Request
 from repro.core.routing import resolve_router
@@ -105,6 +108,10 @@ class ClusterSpec:
     # step-time memo cache (see ExecutionPredictor); False -> exact
     # per-step operator-graph walks and routing draws
     memoize: bool = True
+    # latency-hiding strategy (repro.core.pipeline.PipelineConfig); None
+    # falls back to build_system's topology-wide default (also None ->
+    # the legacy serial-per-micro-batch model, bit-for-bit)
+    pipeline: Optional["PipelineConfig"] = None
 
     def devices_per_replica(self) -> int:
         if self.step == "af":
@@ -184,7 +191,9 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
                  transfer_bw: Optional[float] = None,
                  memory: Union[None, str, dict] = None,
                  queue_policy: Union[None, str, dict, "QueuePolicy"] = None,
-                 seed: int = 0) -> SystemHandle:
+                 seed: int = 0,
+                 pipeline: Union[None, str, dict, PipelineConfig] = None,
+                 ) -> SystemHandle:
     """Compile a StageGraph into a runnable SystemHandle.
 
     ``hw``/``ops`` are the topology defaults; a ClusterSpec with its own
@@ -192,7 +201,10 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
     custom ``ops`` only for homogeneous-hardware clusters).  ``memory``
     ("paged"/"monolithic" + kwargs) and ``queue_policy`` ("fcfs"/"sjf"/
     "priority") select registered KV-manager and queue-ordering policies
-    for every replica.
+    for every replica.  ``pipeline`` (name / mapping / PipelineConfig)
+    selects the latency-hiding strategy for every cluster that does not
+    carry its own ``ClusterSpec.pipeline``; None keeps the legacy serial
+    model bit-for-bit.
     """
     from repro.core.policies.memory import resolve_memory
     from repro.core.policies.scheduling import resolve_scheduler
@@ -208,6 +220,7 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
     routing = resolve_router(routing)
     mem_cls, mem_kw = resolve_memory(memory)
     qpolicy = resolve_scheduler(queue_policy)
+    default_pipe = resolve_pipeline(pipeline)
     metrics = MetricsCollector()
     mode = graph.mode
 
@@ -227,6 +240,13 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
         hw_c = spec.hardware or hw
         ops_c = ops if spec.hardware is None else OperatorModelSet(hw_c)
         prefix = spec.replica_prefix or spec.name
+        pipe = spec.pipeline if spec.pipeline is not None else default_pipe
+        policy = spec.policy
+        if (policy is None and pipe is not None and pipe.chunked_prefill
+                and spec.role in ("prefill", "colocated")):
+            # chunked-prefill strategy: the role-default batching policy
+            # becomes Sarathi-style chunking at the configured budget
+            policy = ChunkedPrefill(chunk=pipe.prefill_chunk)
         replicas = []
         for i in range(spec.n_replicas):
             rseed = seed + spec.seed_offset + i
@@ -243,7 +263,8 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
                     m=spec.m, attn_par=spec.attn_par or spec.par,
                     ffn_par=spec.ffn_par or spec.par,
                     remote_ranks=spec.remote_expert_ranks,
-                    remote_link=link, remote_ops=remote_ops)
+                    remote_link=link, remote_ops=remote_ops,
+                    pipeline=pipe)
             else:
                 pred = ExecutionPredictor(cfg, spec.par, hw_c, ops_c,
                                           routing=routing, seed=rseed,
@@ -252,8 +273,9 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
                           pred.kv_bytes_per_token(), **mem_kw)
             replicas.append(ReplicaWorker(
                 engine, f"{prefix}{i}", pred,
-                spec.policy or _default_policy(spec.role),
-                mem, hooks, role=spec.role, queue_policy=qpolicy))
+                policy or _default_policy(spec.role),
+                mem, hooks, role=spec.role, queue_policy=qpolicy,
+                pipeline=pipe))
         cluster = ClusterWorker(spec.name, spec.role, replicas)
         cluster.spec = spec
         cluster.hw = hw_c

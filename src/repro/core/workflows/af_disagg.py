@@ -24,6 +24,18 @@ cluster's operator models (heterogeneous hardware) — the cross-cluster
 expert-routing regime.  Because dispatch and combine are collectives, the
 EP group advances in lockstep: micro-batch i+1's experts start only after
 micro-batch i's combine has completed on every rank.
+
+The *resource model* of one step is selected by a
+:class:`repro.core.pipeline.PipelineConfig` (see that module):
+``af_overlap="none"`` keeps the legacy lanes (attention compute + FFN
+lockstep, un-contended transfers), ``"serial"`` chains every task on one
+resource (the no-latency-hiding baseline; step time = sum of durations),
+and ``"two_batch"`` adds per-direction NIC lanes so transfers contend but
+hide behind the other micro-batch's attention.  ``ep_overlap`` hides the
+per-rank dispatch/combine legs behind GroupedGEMM compute at a configured
+efficiency.  Every step also books its serial (no-overlap) makespan, so
+``overlap_efficiency = 1 - makespan/serial_makespan`` and the exposed-comm
+fractions are first-class observables.
 """
 from __future__ import annotations
 
@@ -37,6 +49,7 @@ from repro.core.engine import SimEngine
 from repro.core.events import EV
 from repro.core.hardware import HardwareSpec, LinkSpec, ParallelismConfig
 from repro.core.opmodels.analytical import OperatorModelSet
+from repro.core.pipeline import PipelineConfig
 from repro.core.predictor import ExecutionPredictor, StepBreakdown
 from repro.core.routing import RoutingModule, split_by_rank
 
@@ -50,6 +63,13 @@ class AFStepStats:
     attn_bubble_frac: float = 0.0
     ffn_bubble_frac: float = 0.0
     events: int = 0
+    # latency-hiding observability (pipelining layer)
+    serial_makespan: float = 0.0      # sum of all task durations (no overlap)
+    bubble_time: float = 0.0          # attention-lane idle within makespan
+    overlap_efficiency: float = 0.0   # 1 - makespan / serial_makespan
+    attn_exposed_comm: float = 0.0    # F2A time that stalled the attn lane
+    ffn_exposed_comm: float = 0.0     # A2F time that stalled the FFN group
+    ep_overlap_hidden: float = 0.0    # EP a2a time hidden behind GEMMs
     # expert-parallel observability (per-EP-rank event graph)
     ep_dispatch_time: float = 0.0     # sum over stages of the dispatch leg
     ep_combine_time: float = 0.0      # sum over stages of the combine leg
@@ -68,10 +88,14 @@ def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
                             remote_ranks: Sequence[int] = (),
                             remote_link: Optional[LinkSpec] = None,
                             remote_ops: Optional[OperatorModelSet] = None,
+                            pipeline: Optional[PipelineConfig] = None,
                             ) -> AFStepStats:
     """Event-dependency-graph simulation of ONE decode step (one token)."""
     rng = rng or np.random.default_rng(0)
     eng = SimEngine()
+    mode = pipeline.af_overlap if pipeline is not None else "none"
+    eta = pipeline.ep_overlap if pipeline is not None else 0.0
+    nic_lanes = pipeline.nic_lanes if pipeline is not None else 1
     L = cfg.num_layers
     micro = [list(c) for c in np.array_split(np.asarray(context_lens), m)]
     micro = [c for c in micro if len(c)]
@@ -113,9 +137,34 @@ def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
     stats.rank_busy = [0.0] * ep
 
     # ---- resources & dependency-driven scheduling -------------------------
-    attn_free = [0.0]    # attention cluster: single pipeline
-    ffn_free = [0.0]     # FFN/EP group: lockstep (collectives barrier it)
+    # "none":      attention lane + FFN lockstep lane; transfers free.
+    # "serial":    ONE chain shared by everything (no-latency-hiding
+    #              baseline — makespan == sum of task durations).
+    # "two_batch": attention lane + FFN lane + per-direction NIC lanes
+    #              (transfers contend but overlap compute — ping-pong).
+    if mode == "serial":
+        chain = [0.0]
+        attn_free = ffn_free = chain
+    else:
+        attn_free = [0.0]    # attention cluster: single pipeline
+        ffn_free = [0.0]     # FFN/EP group: lockstep (collectives barrier it)
+    a2f_nic = [0.0] * nic_lanes
+    f2a_nic = [0.0] * nic_lanes
     done_f2a = {i: 0.0 for i in range(m_eff)}  # F2A(i, k-1) completion
+    f2a_dur = {i: 0.0 for i in range(m_eff)}   # its transfer duration
+
+    def xfer_start(lanes: List[float], dur: float) -> float:
+        """Transfer start time under the mode's NIC resource model."""
+        if mode == "serial":
+            start = max(eng.now, attn_free[0])   # the one shared chain
+            attn_free[0] = start + dur
+            return start
+        if mode == "two_batch":
+            j = min(range(len(lanes)), key=lambda n: lanes[n])
+            start = max(eng.now, lanes[j])
+            lanes[j] = start + dur
+            return start
+        return eng.now                           # legacy: un-contended NIC
 
     def schedule_attn(i: int, k: int, ev=None):
         kind = attn_kinds[k]
@@ -124,24 +173,38 @@ def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
             dur = ops.gemm(len(micro[i]), d, d) * 3
         else:
             dur = t_attn(micro[i], kind)
+        if k > 0 and mode != "serial":
+            # F2A return time that the attention lane could not hide
+            stats.attn_exposed_comm += max(
+                0.0, min(done_f2a[i] - attn_free[0], f2a_dur[i]))
         start = max(eng.now, attn_free[0], done_f2a[i])
         attn_free[0] = start + dur
         stats.attn_busy += dur
+        stats.serial_makespan += dur
         eng.at(start + dur, EV.ATTN_COMPUTE_DONE,
                lambda ev: schedule_a2f(i, k), i=i, k=k)
 
     def schedule_a2f(i: int, k: int):
         dur = t_xfer(len(micro[i]))
         stats.transfer_bytes += 2.0 * len(micro[i]) * d
-        eng.at(eng.now + dur, EV.A2F_TRANSFER_DONE,
-               lambda ev: schedule_ffn(i, k), i=i, k=k)
+        stats.serial_makespan += dur
+        if mode == "serial":
+            stats.ffn_exposed_comm += dur   # nothing hides on one chain
+        start = xfer_start(a2f_nic, dur)
+        eng.at(start + dur, EV.A2F_TRANSFER_DONE,
+               lambda ev: schedule_ffn(i, k, dur), i=i, k=k)
 
-    def schedule_ffn(i: int, k: int):
+    def schedule_ffn(i: int, k: int, xfer: float = 0.0):
+        if mode != "serial":
+            # A2F delivery time that stalled the (idle) FFN group
+            stats.ffn_exposed_comm += max(
+                0.0, min(eng.now - ffn_free[0], xfer))
         if cfg.moe is None:
             dur = t_ffn_dense(len(micro[i]))
             start = max(eng.now, ffn_free[0])
             ffn_free[0] = start + dur
             stats.ffn_busy += dur
+            stats.serial_makespan += dur
             eng.at(start + dur, EV.FFN_COMPUTE_DONE,
                    lambda ev: schedule_f2a(i, k), i=i, k=k)
         else:
@@ -177,14 +240,21 @@ def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
         # dispatch and combine are collectives: the group advances in
         # lockstep, so the whole stage timeline is fixed once the dispatch
         # starts — compute it, reserve the group through the combine, and
-        # emit the per-rank events at their true timestamps.
+        # emit the per-rank events at their true timestamps.  With
+        # ep_overlap=eta the a2a legs hide behind GroupedGEMM compute
+        # (chunked dispatch): comm+compute pairs cost
+        # (1-eta)*(comm+compute) + eta*max(comm, compute).
         finish: List[float] = []
+        serial_finish = 0.0
         for r in range(ep):
             rops = r_ops if r in remote else ops
             dur = n_mats * rops.grouped_gemm(list(per_rank[r]), d,
                                              moe.expert_d_ff)
             stats.rank_busy[r] += dur
-            t_ready = t0 + t_gate + legs[r]
+            serial_finish = max(serial_finish, t_gate + legs[r] + dur)
+            hidden = eta * min(legs[r], dur)
+            stats.ep_overlap_hidden += hidden
+            t_ready = t0 + t_gate + (legs[r] - hidden)
             finish.append(t_ready + dur)
             eng.at(t_ready, EV.EXPERT_DISPATCH_DONE, None, i=i, k=k, r=r)
             eng.at(t_ready + dur, EV.EXPERT_RANK_DONE, None, i=i, k=k, r=r)
@@ -196,10 +266,20 @@ def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
         if moe.num_shared_experts:
             t_shared = n_mats * ops.gemm(
                 n_tok, moe.expert_d_ff * moe.num_shared_experts, d)
-        end = barrier + t_comb + t_shared
+        if eta > 0.0:
+            # combine a2a overlaps the shared-expert GEMM tail at eta
+            tail = ((1.0 - eta) * (t_comb + t_shared)
+                    + eta * max(t_comb, t_shared))
+            stats.ep_overlap_hidden += (t_comb + t_shared) - tail
+        else:
+            tail = t_comb + t_shared
+        end = barrier + tail
         # combine leg + the serial shared-expert tail (dispatch_time covers
         # only the inbound collective, so the two fields stay distinct)
         stats.ep_combine_time += t_comb + t_shared
+        # the no-overlap baseline runs EP ranks in parallel but overlaps
+        # nothing else: gate + slowest (dispatch + GEMM) + combine + shared
+        stats.serial_makespan += serial_finish + t_comb + t_shared
         ffn_free[0] = end
         stats.ffn_busy += end - t0
         eng.at(end, EV.EXPERT_COMBINE_DONE,
@@ -208,12 +288,17 @@ def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
     def schedule_f2a(i: int, k: int):
         dur = t_xfer(len(micro[i]))
         stats.transfer_bytes += 2.0 * len(micro[i]) * d
+        stats.serial_makespan += dur
+        if mode == "serial":
+            stats.attn_exposed_comm += dur
+        start = xfer_start(f2a_nic, dur)
 
         def done(ev):
             done_f2a[i] = eng.now
+            f2a_dur[i] = dur
             if k + 1 < L:
                 schedule_attn(i, k + 1)
-        eng.at(eng.now + dur, EV.F2A_TRANSFER_DONE, done, i=i, k=k)
+        eng.at(start + dur, EV.F2A_TRANSFER_DONE, done, i=i, k=k)
 
     for i in range(m_eff):
         schedule_attn(i, 0)
@@ -224,6 +309,10 @@ def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
     if stats.makespan > 0:
         stats.attn_bubble_frac = 1.0 - stats.attn_busy / stats.makespan
         stats.ffn_bubble_frac = 1.0 - stats.ffn_busy / stats.makespan
+    stats.bubble_time = max(stats.makespan - stats.attn_busy, 0.0)
+    if stats.serial_makespan > 0:
+        stats.overlap_efficiency = max(
+            1.0 - stats.makespan / stats.serial_makespan, 0.0)
     return stats
 
 
@@ -235,7 +324,8 @@ class AFPipelinePredictor(ExecutionPredictor):
                  ffn_par: Optional[ParallelismConfig] = None,
                  remote_ranks: Sequence[int] = (),
                  remote_link: Optional[LinkSpec] = None,
-                 remote_ops: Optional[OperatorModelSet] = None, **kw):
+                 remote_ops: Optional[OperatorModelSet] = None,
+                 pipeline: Optional[PipelineConfig] = None, **kw):
         super().__init__(*args, **kw)
         self.m = m
         self.attn_par = attn_par or self.par
@@ -243,6 +333,7 @@ class AFPipelinePredictor(ExecutionPredictor):
         self.remote_ranks = tuple(remote_ranks)
         self.remote_link = remote_link
         self.remote_ops = remote_ops
+        self.pipeline = pipeline
         self.last_stats: Optional[AFStepStats] = None
         # run-level EP observability totals (cache hits replay the cached
         # step's stats, so totals stay consistent with simulated time)
@@ -250,6 +341,10 @@ class AFPipelinePredictor(ExecutionPredictor):
             "decode_steps": 0, "makespan_s": 0.0, "ep_dispatch_time_s": 0.0,
             "ep_combine_time_s": 0.0, "ep_straggler_excess_s": 0.0,
             "cross_cluster_bytes": 0.0, "transfer_bytes": 0.0,
+            # latency-hiding observability (pipelining layer)
+            "serial_makespan_s": 0.0, "bubble_time_s": 0.0,
+            "attn_exposed_comm_s": 0.0, "ffn_exposed_comm_s": 0.0,
+            "ep_overlap_hidden_s": 0.0,
         }
 
     def _accumulate(self, stats: AFStepStats) -> None:
@@ -261,6 +356,11 @@ class AFPipelinePredictor(ExecutionPredictor):
         t["ep_straggler_excess_s"] += float(stats.ep_straggler_excess)
         t["cross_cluster_bytes"] += float(stats.cross_cluster_bytes)
         t["transfer_bytes"] += float(stats.transfer_bytes)
+        t["serial_makespan_s"] += float(stats.serial_makespan)
+        t["bubble_time_s"] += float(stats.bubble_time)
+        t["attn_exposed_comm_s"] += float(stats.attn_exposed_comm)
+        t["ffn_exposed_comm_s"] += float(stats.ffn_exposed_comm)
+        t["ep_overlap_hidden_s"] += float(stats.ep_overlap_hidden)
 
     def _on_cache_hit(self, bd: StepBreakdown) -> None:
         # cached prefill steps carry no AF stats; keep the last decode stats
@@ -268,15 +368,17 @@ class AFPipelinePredictor(ExecutionPredictor):
             self.last_stats = bd.af_stats
             self._accumulate(bd.af_stats)
 
-    def _step_time_impl(self, q_lens, kv_lens, *, decode: bool) -> StepBreakdown:
+    def _step_time_impl(self, q_lens, kv_lens, *, decode: bool,
+                        n_prefill=None) -> StepBreakdown:
         if not decode:
-            return super()._step_time_impl(q_lens, kv_lens, decode=False)
+            return super()._step_time_impl(q_lens, kv_lens, decode=False,
+                                           n_prefill=n_prefill)
         stats = simulate_af_decode_step(
             self.cfg, self.hw, self.ops, list(kv_lens), m=self.m,
             attn_par=self.attn_par, ffn_par=self.ffn_par,
             routing=self.routing, rng=self.rng,
             remote_ranks=self.remote_ranks, remote_link=self.remote_link,
-            remote_ops=self.remote_ops)
+            remote_ops=self.remote_ops, pipeline=self.pipeline)
         self.last_stats = stats
         self._accumulate(stats)
         bd = StepBreakdown()
@@ -300,7 +402,8 @@ def build_af(cfg: ModelConfig, hw: HardwareSpec, *,
              remote_expert_ranks: Sequence[int] = (),
              expert_link: Optional[LinkSpec] = None,
              memory=None, queue_policy=None,
-             memoize: bool = True):
+             memoize: bool = True,
+             pipeline=None):
     """PD front + AF-disaggregated decode (as deployed by MegaScale-Infer).
 
     .. deprecated::
@@ -329,4 +432,5 @@ def build_af(cfg: ModelConfig, hw: HardwareSpec, *,
                     expert_link=expert_link, memoize=memoize),
     ])
     return build_system(cfg, hw, graph, ops=ops, routing=routing,
-                        memory=memory, queue_policy=queue_policy, seed=seed)
+                        memory=memory, queue_policy=queue_policy, seed=seed,
+                        pipeline=pipeline)

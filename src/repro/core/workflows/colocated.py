@@ -26,7 +26,8 @@ def build_colocated(cfg: ModelConfig, hw: HardwareSpec, *,
                     engine: Optional[SimEngine] = None,
                     routing=None, seed: int = 0,
                     memory=None, queue_policy=None,
-                    memoize: bool = True) -> SystemHandle:
+                    memoize: bool = True,
+                    pipeline=None) -> SystemHandle:
     """Colocated preset.
 
     .. deprecated::
@@ -42,4 +43,5 @@ def build_colocated(cfg: ModelConfig, hw: HardwareSpec, *,
     ])
     return build_system(cfg, hw, graph, ops=ops, routing=routing,
                         engine=engine, memory=memory,
-                        queue_policy=queue_policy, seed=seed)
+                        queue_policy=queue_policy, seed=seed,
+                        pipeline=pipeline)

@@ -28,7 +28,8 @@ def build_pd(cfg: ModelConfig, hw: HardwareSpec, *,
              transfer_bw: Optional[float] = None,
              routing=None, seed: int = 0,
              memory=None, queue_policy=None,
-             memoize: bool = True) -> SystemHandle:
+             memoize: bool = True,
+             pipeline=None) -> SystemHandle:
     """PD-disaggregation preset.
 
     .. deprecated::
@@ -47,4 +48,5 @@ def build_pd(cfg: ModelConfig, hw: HardwareSpec, *,
     ])
     return build_system(cfg, hw, graph, ops=ops, routing=routing,
                         transfer_bw=transfer_bw, memory=memory,
-                        queue_policy=queue_policy, seed=seed)
+                        queue_policy=queue_policy, seed=seed,
+                        pipeline=pipeline)

@@ -7,6 +7,10 @@ import sys
 import textwrap
 from pathlib import Path
 
+import pytest
+
+pytestmark = pytest.mark.slow   # tier-2: subprocess multi-device runs
+
 ROOT = Path(__file__).resolve().parent.parent
 
 

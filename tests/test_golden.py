@@ -1,0 +1,101 @@
+"""Golden-report regression fixtures for the three canonical presets.
+
+Fails with a per-metric diff when a summary drifts by more than 1e-6
+(relative) without an intentional update.  To bless new numbers after an
+intended simulator change:
+
+    REPRO_UPDATE_GOLDENS=1 PYTHONPATH=src python -m pytest tests/test_golden.py
+"""
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.api import SimSpec, run
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+RTOL = 1e-6
+
+SPECS = {
+    "colocated": {
+        "name": "golden-colocated",
+        "model": {"name": "qwen2-7b", "smoke": True},
+        "topology": {"preset": "colocated", "n_replicas": 2, "tp": 1},
+        "workload": {"n_requests": 60, "rate": 30.0, "prompt_mean": 512,
+                     "output_mean": 64, "seed": 11},
+        "slo": {"ttft_s": 1.0, "tpot_s": 0.05},
+        "seed": 11,
+    },
+    "pd_disagg": {
+        "name": "golden-pd",
+        "model": {"name": "qwen2-7b", "smoke": True},
+        "topology": {"preset": "pd", "n_prefill": 1, "n_decode": 2},
+        "workload": {"n_requests": 60, "rate": 25.0, "prompt_mean": 1024,
+                     "output_mean": 96, "seed": 12},
+        "seed": 12,
+    },
+    "af_moe": {
+        "name": "golden-af-moe",
+        "model": {"name": "mixtral-8x7b", "smoke": True},
+        "topology": {"preset": "af", "n_prefill": 1, "n_decode": 1,
+                     "m": 4, "ffn_ep": 4},
+        "workload": {"n_requests": 40, "rate": 20.0, "prompt_mean": 256,
+                     "output_mean": 32, "seed": 13},
+        "pipeline": {"preset": "two_batch", "ep_overlap": 0.5},
+        "seed": 13,
+    },
+}
+
+
+def _golden_payload(rep):
+    return {"spec_hash": rep.spec_hash, "summary": rep.summary}
+
+
+def _diff(expected, actual):
+    """Readable per-key drift report; empty list means 'matches'."""
+    lines = []
+    for key in sorted(set(expected) | set(actual)):
+        e, a = expected.get(key, "<missing>"), actual.get(key, "<missing>")
+        if isinstance(e, float) and isinstance(a, float):
+            tol = RTOL * max(abs(e), abs(a), 1e-12)
+            if abs(e - a) > tol:
+                lines.append(f"  {key}: golden={e!r} actual={a!r} "
+                             f"(drift {a - e:+.3e})")
+        elif e != a:
+            lines.append(f"  {key}: golden={e!r} actual={a!r}")
+    return lines
+
+
+@pytest.mark.parametrize("preset", sorted(SPECS))
+def test_summary_matches_golden(preset):
+    rep = run(SimSpec.from_dict(SPECS[preset]))
+    path = GOLDEN_DIR / f"{preset}.json"
+    if os.environ.get("REPRO_UPDATE_GOLDENS"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(_golden_payload(rep), indent=2,
+                                   sort_keys=True) + "\n")
+        pytest.skip(f"golden updated: {path}")
+    assert path.exists(), (
+        f"missing golden fixture {path}; generate it with "
+        f"REPRO_UPDATE_GOLDENS=1")
+    golden = json.loads(path.read_text())
+    drift = _diff(golden["summary"], rep.summary)
+    if golden["spec_hash"] != rep.spec_hash:
+        drift.insert(0, f"  spec_hash: golden={golden['spec_hash']} "
+                        f"actual={rep.spec_hash} (the spec schema or "
+                        f"defaults changed)")
+    assert not drift, (
+        f"golden report '{preset}' drifted (>{RTOL:g} rel):\n"
+        + "\n".join(drift)
+        + "\nIf intentional, re-bless with REPRO_UPDATE_GOLDENS=1")
+
+
+def test_goldens_complete_and_valid_json():
+    for preset in SPECS:
+        path = GOLDEN_DIR / f"{preset}.json"
+        if not path.exists():
+            pytest.skip("goldens not generated yet")
+        payload = json.loads(path.read_text())   # strict: NaN would raise
+        json.loads(json.dumps(payload["summary"], allow_nan=False))
+        assert payload["summary"]["n_completed"] > 0

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.kernels   # tier-2: interpreted Pallas on CPU
+
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 

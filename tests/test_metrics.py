@@ -1,0 +1,44 @@
+"""Report metrics must stay valid JSON: empty-sample statistics are None
+(JSON null), never a bare NaN literal (which json.dumps happily emits and
+every strict parser rejects — the bug that corrupted sweep artifacts)."""
+import json
+import math
+
+from repro.api import ModelRef, SimSpec, TopologySpec, WorkloadSpec, run
+from repro.core.metrics import MetricsCollector, _pct
+
+
+def test_pct_empty_returns_none_not_nan():
+    assert _pct([], 50) is None
+    assert _pct([1.0, 2.0], 50) == 1.5
+
+
+def test_empty_collector_report_is_valid_json():
+    rep = MetricsCollector().report(n_devices=4)
+    blob = json.dumps(rep, allow_nan=False)      # raises on NaN
+    back = json.loads(blob)
+    assert back["n_completed"] == 0
+    assert back["ttft_p50_s"] is None
+    assert back["tpot_p99_s"] is None
+    assert not any(isinstance(v, float) and math.isnan(v)
+                   for v in rep.values())
+
+
+def test_zero_completed_run_produces_parseable_report():
+    """A run cut off before any request completes (until ~ 0) must still
+    serialize to strict JSON and round-trip through Report.from_dict."""
+    spec = SimSpec(
+        model=ModelRef("qwen2-7b", smoke=True),
+        topology=TopologySpec(preset="pd"),
+        workload=WorkloadSpec(n_requests=5, rate=1.0, seed=0),
+        until=1e-9)
+    rep = run(spec)
+    assert rep.summary["n_completed"] == 0
+    assert not rep.all_complete
+    blob = rep.to_json()
+    parsed = json.loads(blob, parse_constant=lambda c: (_ for _ in ()).throw(
+        ValueError(f"non-finite JSON constant {c!r} in report")))
+    assert parsed["summary"]["ttft_p50_s"] is None
+    from repro.api import Report
+    again = Report.from_dict(json.loads(blob))
+    assert again.summary == rep.summary

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.kernels   # tier-2: kernel-path equivalence on CPU
+
 from repro.configs import get_config
 from repro.models import build_model, init_tree
 from repro.models.common import AxisRules

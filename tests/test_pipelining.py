@@ -1,0 +1,293 @@
+"""Latency-hiding pipelining layer: AF overlap modes (serial / legacy /
+two-batch), chunked prefill with piggybacked decode, EP comm-compute
+overlap, the PipelineConfig/PipelineSpec plumbing, and the new Report
+observables (bubble_time, overlap_efficiency, exposed-comm fractions)."""
+import numpy as np
+import pytest
+
+from repro.api import (
+    ModelRef, PipelineSpec, SimSpec, SpecError, TopologySpec, WorkloadSpec,
+    run,
+)
+from repro.configs import get_config
+from repro.core import A800_SXM4_80G, ParallelismConfig, \
+    simulate_af_decode_step
+from repro.core.opmodels.analytical import OperatorModelSet
+from repro.core.pipeline import (
+    PIPELINES, PipelineConfig, resolve_pipeline,
+)
+from repro.core.predictor import ExecutionPredictor
+from repro.core.routing import BalancedRouting
+
+HW = A800_SXM4_80G
+MCFG = get_config("mixtral-8x7b")
+OPS = OperatorModelSet(HW)
+LENS = [512] * 64
+
+
+def _step(pipeline=None, **kw):
+    args = dict(m=2, attn_par=ParallelismConfig(tp=2),
+                ffn_par=ParallelismConfig(tp=1, ep=4),
+                routing=BalancedRouting(),
+                rng=np.random.default_rng(0))
+    args.update(kw)
+    return simulate_af_decode_step(MCFG, HW, OPS, LENS, pipeline=pipeline,
+                                   **args)
+
+
+# --------------------------------------------------------- config layer --
+def test_resolve_pipeline_accepts_all_spellings():
+    assert resolve_pipeline(None) is None
+    cfg = PipelineConfig(af_overlap="two_batch")
+    assert resolve_pipeline(cfg) is cfg
+    assert resolve_pipeline("serial").af_overlap == "serial"
+    byname = resolve_pipeline({"name": "two_batch", "nic_lanes": 2})
+    assert byname.af_overlap == "two_batch" and byname.nic_lanes == 2
+    plain = resolve_pipeline({"chunked_prefill": True, "prefill_chunk": 64})
+    assert plain.chunked_prefill and plain.prefill_chunk == 64
+
+
+def test_resolve_pipeline_rejects_bad_input():
+    with pytest.raises(KeyError, match="unknown pipeline preset"):
+        resolve_pipeline("warp_speed")
+    with pytest.raises(TypeError):
+        resolve_pipeline(42)
+    with pytest.raises(ValueError, match="ep_overlap"):
+        resolve_pipeline({"ep_overlap": 1.5})
+    with pytest.raises(ValueError, match="af_overlap"):
+        PipelineConfig(af_overlap="bogus").validate()
+
+
+def test_registered_presets_are_valid():
+    for name, cfg in PIPELINES.items():
+        cfg.validate()
+        assert cfg.enabled, name
+    assert not PipelineConfig().enabled
+
+
+# ------------------------------------------------------- AF step overlap --
+def test_disabled_pipeline_is_bit_identical_to_legacy():
+    """pipeline=None and a default PipelineConfig must reproduce exactly
+    the same event graph (the acceptance bit-for-bit requirement)."""
+    legacy = _step()
+    off = _step(pipeline=PipelineConfig())
+    assert off.makespan == legacy.makespan
+    assert off.attn_busy == legacy.attn_busy
+    assert off.ffn_busy == legacy.ffn_busy
+    assert off.events == legacy.events
+    assert off.rank_busy == legacy.rank_busy
+
+
+def test_serial_mode_makespan_equals_sum_of_durations():
+    st = _step(pipeline=PipelineConfig(af_overlap="serial"))
+    assert st.makespan == pytest.approx(st.serial_makespan, rel=1e-9)
+    assert st.overlap_efficiency == pytest.approx(0.0, abs=1e-9)
+
+
+@pytest.mark.parametrize("m", [2, 4, 8])
+def test_two_batch_overlap_strictly_beats_serial(m):
+    serial = _step(m=m, pipeline=PipelineConfig(af_overlap="serial"))
+    two = _step(m=m, pipeline=PipelineConfig(af_overlap="two_batch"))
+    assert two.makespan < serial.makespan
+    assert two.overlap_efficiency > 0.0
+    assert two.serial_makespan == pytest.approx(serial.serial_makespan,
+                                                rel=1e-9)
+
+
+def test_single_microbatch_cannot_overlap():
+    serial = _step(m=1, pipeline=PipelineConfig(af_overlap="serial"))
+    two = _step(m=1, pipeline=PipelineConfig(af_overlap="two_batch"))
+    assert two.makespan == pytest.approx(serial.makespan, rel=1e-9)
+
+
+def test_overlap_metrics_well_formed():
+    for pipe in (None, PipelineConfig(af_overlap="serial"),
+                 PipelineConfig(af_overlap="two_batch"),
+                 PipelineConfig(af_overlap="two_batch", ep_overlap=0.7)):
+        st = _step(pipeline=pipe)
+        assert st.bubble_time >= 0.0
+        assert st.makespan <= st.serial_makespan * (1 + 1e-9)
+        assert 0.0 <= st.overlap_efficiency <= 1.0
+        assert st.attn_exposed_comm >= 0.0
+        assert st.ffn_exposed_comm >= 0.0
+        assert st.bubble_time == pytest.approx(
+            st.makespan - st.attn_busy, abs=1e-12)
+
+
+def test_nic_lane_contention_never_beats_free_transfers():
+    """two_batch adds finite NIC lanes, so it can only be >= the legacy
+    un-contended model; extra lanes monotonically relieve the contention."""
+    free = _step(m=8)
+    one_lane = _step(m=8, pipeline=PipelineConfig(af_overlap="two_batch",
+                                                  nic_lanes=1))
+    four_lanes = _step(m=8, pipeline=PipelineConfig(af_overlap="two_batch",
+                                                    nic_lanes=4))
+    assert one_lane.makespan >= free.makespan - 1e-15
+    assert four_lanes.makespan <= one_lane.makespan + 1e-15
+
+
+def test_ep_overlap_hides_comm_monotonically():
+    mk = [
+        _step(pipeline=PipelineConfig(ep_overlap=eta)).makespan
+        for eta in (0.0, 0.4, 0.8, 1.0)
+    ]
+    assert all(a >= b - 1e-15 for a, b in zip(mk, mk[1:]))
+    assert mk[-1] < mk[0]
+    st = _step(pipeline=PipelineConfig(ep_overlap=0.8))
+    assert st.ep_overlap_hidden > 0.0
+
+
+def test_ep_overlap_zero_is_bit_identical():
+    legacy = _step()
+    eta0 = _step(pipeline=PipelineConfig(ep_overlap=0.0))
+    assert eta0.makespan == legacy.makespan
+    assert eta0.ep_overlap_hidden == 0.0
+
+
+# --------------------------------------------- chunked prefill (mixed) --
+def test_mixed_step_prices_attention_per_class():
+    """A mixed chunked-prefill step = prefill attention for the chunk rows
+    + decode attention for the piggybacked rows + GEMMs over the union."""
+    cfg = get_config("qwen2-7b")
+    pred = ExecutionPredictor(cfg, ParallelismConfig(tp=1), HW,
+                              OperatorModelSet(HW), memoize=False)
+    q = [256, 256] + [1] * 8
+    kv = [256, 256] + [1000] * 8
+    mixed = pred.step_time(q, kv, decode=False, n_prefill=2)
+    pure_prefill = pred.step_time(q, kv, decode=False)
+    # decode rows priced with the decode kernel differ from prefill pricing
+    assert mixed.total != pure_prefill.total
+    assert mixed.total > 0
+    # and the class split covers the whole batch: attention equals the sum
+    # of its per-class prices
+    pf = pred.step_time(q[:2], kv[:2], decode=False)
+    dc = pred.step_time(q[2:], kv[2:], decode=True)
+    assert mixed.parts["attn"] == pytest.approx(
+        pf.parts["attn"] + dc.parts["attn"], rel=1e-9)
+
+
+def test_mixed_step_memo_keys_do_not_alias_pure_steps():
+    pred = ExecutionPredictor(get_config("qwen2-7b"),
+                              ParallelismConfig(tp=1), HW,
+                              OperatorModelSet(HW))
+    q = [128] + [1] * 4
+    kv = [128] + [512] * 4
+    a = pred.step_time(q, kv, decode=False)
+    b = pred.step_time(q, kv, decode=False, n_prefill=1)
+    assert a.total != b.total       # cached pure step must not be replayed
+
+
+def test_chunked_prefill_piggybacks_decode_end_to_end():
+    base = dict(
+        model=ModelRef("qwen2-7b", smoke=True),
+        topology=TopologySpec(preset="colocated", n_replicas=1),
+        workload=WorkloadSpec(n_requests=40, rate=30.0, prompt_mean=1024,
+                              output_mean=64, seed=2))
+    off = run(SimSpec(**base))
+    on = run(SimSpec(**base, pipeline=PipelineSpec(chunked_prefill=True,
+                                                   prefill_chunk=256)))
+    assert off.all_complete and on.all_complete
+    piggy = sum(r.get("piggyback_tokens", 0)
+                for r in on.clusters["colocated"]["replicas"].values())
+    assert piggy > 0, "mixed prefill+decode batches should have formed"
+    assert all("piggyback_tokens" not in r
+               for r in off.clusters["colocated"]["replicas"].values())
+
+
+def test_chunked_prefill_respects_explicit_policy():
+    """An explicit batching policy wins over the pipeline's chunking."""
+    spec = SimSpec(
+        model=ModelRef("qwen2-7b", smoke=True),
+        topology=TopologySpec(preset="colocated"),
+        workload=WorkloadSpec(n_requests=10, rate=20.0, seed=0),
+        policy={"batching": "static"},
+        pipeline=PipelineSpec(chunked_prefill=True))
+    from repro.api import build
+    handle = build(SimSpec.from_dict(spec.to_dict()))
+    pol = handle.clusters["colocated"].replicas[0].policy
+    assert pol.name == "static"
+
+
+# ------------------------------------------------------------ API layer --
+def _af_base(**pipeline):
+    return dict(
+        model=ModelRef("mixtral-8x7b", smoke=True),
+        topology=TopologySpec(preset="af", n_prefill=1, n_decode=1, m=4,
+                              ffn_ep=4),
+        workload=WorkloadSpec(n_requests=30, rate=20.0, prompt_mean=256,
+                              output_mean=32, seed=1),
+        **({"pipeline": PipelineSpec(**pipeline)} if pipeline else {}))
+
+
+def test_af_report_carries_overlap_observables():
+    rep = run(SimSpec(**_af_base(preset="two_batch")))
+    assert "bubble_time_s" in rep.summary
+    assert "overlap_efficiency" in rep.summary
+    assert rep.summary["bubble_time_s"] >= 0.0
+    af = rep.clusters["decode"]["af"]
+    for key in ("serial_makespan_s", "bubble_time_s", "overlap_efficiency",
+                "attn_exposed_comm_frac", "ffn_exposed_comm_frac"):
+        assert key in af, key
+    assert af["makespan_s"] <= af["serial_makespan_s"] * (1 + 1e-9)
+
+
+def test_af_two_batch_beats_serial_end_to_end():
+    serial = run(SimSpec(**_af_base(preset="serial")))
+    two = run(SimSpec(**_af_base(preset="two_batch")))
+    assert (two.clusters["decode"]["af"]["makespan_s"]
+            < serial.clusters["decode"]["af"]["makespan_s"])
+    assert two.summary["overlap_efficiency"] > \
+        serial.summary["overlap_efficiency"]
+
+
+def test_disabling_pipeline_reproduces_legacy_report_bit_for_bit():
+    """spec.pipeline=None must equal the pre-pipelining simulator."""
+    off = run(SimSpec(**_af_base()))
+    off2 = run(SimSpec(**_af_base()))
+    assert off.summary == off2.summary
+    # the only additions with pipelining off are the new observables
+    two = run(SimSpec(**_af_base(preset="two_batch", ep_overlap=0.0,
+                                 nic_lanes=64)))
+    # with more NIC lanes than in-flight transfers, two_batch == free-NIC
+    assert two.summary["tpot_p50_s"] == off.summary["tpot_p50_s"]
+
+
+def test_pipeline_spec_validation_and_roundtrip():
+    spec = SimSpec(**_af_base(preset="full_overlap", prefill_chunk=128))
+    again = SimSpec.from_yaml(spec.to_yaml())
+    assert again.spec_hash() == spec.spec_hash()
+    cfg = again.pipeline.to_config()
+    assert cfg.af_overlap == "two_batch" and cfg.chunked_prefill
+    assert cfg.prefill_chunk == 128
+    with pytest.raises(SpecError, match="pipeline.preset"):
+        SimSpec(pipeline=PipelineSpec(preset="bogus")).validate()
+    with pytest.raises(SpecError, match="pipeline.af_overlap"):
+        SimSpec(pipeline=PipelineSpec(af_overlap="bogus")).validate()
+    with pytest.raises(SpecError, match="pipeline"):
+        SimSpec(pipeline=PipelineSpec(ep_overlap=2.0)).validate()
+    named = SimSpec.from_dict({"pipeline": "two_batch"})
+    assert named.pipeline.to_config().af_overlap == "two_batch"
+    # to_config() itself must refuse unknown presets, not silently
+    # compile them to the no-op legacy config
+    with pytest.raises(KeyError, match="unknown pipeline preset"):
+        PipelineSpec(preset="two_bach").to_config()
+
+
+def test_inline_cluster_pipeline_key():
+    spec = SimSpec.from_dict({
+        "model": {"name": "mixtral-8x7b", "smoke": True},
+        "topology": {"preset": None, "clusters": [
+            {"name": "prefill", "role": "prefill",
+             "pipeline": "chunked_prefill"},
+            {"name": "decode", "role": "decode", "step": "af", "m": 2,
+             "ffn_ep": 4,
+             "pipeline": {"name": "two_batch", "ep_overlap": 0.5}},
+        ], "links": [
+            {"src": "prefill", "dst": "decode", "bandwidth": 5.0e10},
+        ]},
+        "workload": {"n_requests": 15, "rate": 20.0, "prompt_mean": 128,
+                     "output_mean": 16},
+    })
+    rep = run(spec)
+    assert rep.all_complete
+    assert rep.clusters["decode"]["af"]["ep_overlap_hidden_s"] > 0.0

@@ -1,0 +1,118 @@
+"""Property-based invariants (hypothesis): event/token conservation over
+random StageGraphs, and overlap bounds over random pipelining configs.
+
+Guarded by importorskip like the kernel suite — the properties run
+wherever hypothesis is installed (the CI image has it)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.api import ModelRef, SimSpec, TopologySpec, WorkloadSpec, run
+from repro.configs import get_config
+from repro.core import A800_SXM4_80G, ParallelismConfig, \
+    simulate_af_decode_step
+from repro.core.opmodels.analytical import OperatorModelSet
+from repro.core.pipeline import PipelineConfig
+
+HW = A800_SXM4_80G
+MCFG = get_config("mixtral-8x7b", smoke=True)
+OPS = OperatorModelSet(HW)
+
+# keep each drawn simulation small: hypothesis multiplies examples
+_SETTINGS = dict(max_examples=15, deadline=None)
+
+
+# ------------------------------------------------- random pipeline steps --
+pipeline_configs = st.builds(
+    PipelineConfig,
+    af_overlap=st.sampled_from(("none", "serial", "two_batch")),
+    nic_lanes=st.integers(min_value=1, max_value=4),
+    chunked_prefill=st.booleans(),
+    prefill_chunk=st.sampled_from((64, 256, 1024)),
+    ep_overlap=st.floats(min_value=0.0, max_value=1.0,
+                         allow_nan=False))
+
+
+@given(pipe=pipeline_configs,
+       m=st.integers(min_value=1, max_value=6),
+       n_seq=st.integers(min_value=1, max_value=48),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(**_SETTINGS)
+def test_af_step_overlap_bounds_hold_for_random_configs(pipe, m, n_seq,
+                                                        seed):
+    rng = np.random.default_rng(seed)
+    lens = list(rng.integers(16, 4096, n_seq))
+    st_ = simulate_af_decode_step(
+        MCFG, HW, OPS, lens, m=m,
+        attn_par=ParallelismConfig(tp=2),
+        ffn_par=ParallelismConfig(tp=1, ep=4),
+        rng=np.random.default_rng(seed), pipeline=pipe)
+    # overlapped makespan never exceeds the serial (sum-of-durations) one
+    assert st_.makespan <= st_.serial_makespan * (1 + 1e-9)
+    assert st_.bubble_time >= 0.0
+    assert 0.0 <= st_.overlap_efficiency <= 1.0
+    assert st_.attn_exposed_comm >= -1e-12
+    assert st_.ffn_exposed_comm >= -1e-12
+    assert st_.ep_overlap_hidden >= -1e-12
+    assert st_.makespan >= max(st_.attn_busy / max(m, 1), 0.0) - 1e-9
+
+
+# ---------------------------------------------- random topologies (e2e) --
+def _graph_strategy():
+    colocated = st.fixed_dictionaries({
+        "preset": st.just("colocated"),
+        "n_replicas": st.integers(1, 3),
+        "tp": st.sampled_from((1, 2)),
+    })
+    pd = st.fixed_dictionaries({
+        "preset": st.just("pd"),
+        "n_prefill": st.integers(1, 2),
+        "n_decode": st.integers(1, 3),
+    })
+    af = st.fixed_dictionaries({
+        "preset": st.just("af"),
+        "n_prefill": st.integers(1, 2),
+        "n_decode": st.integers(1, 2),
+        "m": st.sampled_from((1, 2, 4)),
+        "ffn_ep": st.sampled_from((2, 4)),
+    })
+    return st.one_of(colocated, pd, af)
+
+
+pipeline_specs = st.one_of(
+    st.none(),
+    st.sampled_from(("serial", "two_batch", "chunked_prefill",
+                     "full_overlap")))
+
+
+@given(topo=_graph_strategy(), pipe=pipeline_specs,
+       n_requests=st.integers(min_value=5, max_value=25),
+       seed=st.integers(min_value=0, max_value=10**6))
+@settings(**_SETTINGS)
+def test_random_topology_and_pipeline_conserves_requests(topo, pipe,
+                                                         n_requests, seed):
+    """No request is ever lost or duplicated, whatever graph/pipelining
+    strategy is drawn — and every generated token is accounted for."""
+    model = "mixtral-8x7b" if topo["preset"] == "af" else "qwen2-7b"
+    spec = SimSpec.from_dict({
+        "model": {"name": model, "smoke": True},
+        "topology": topo,
+        "workload": {"n_requests": n_requests, "rate": 50.0,
+                     "prompt_mean": 128, "prompt_max": 512,
+                     "output_mean": 16, "output_max": 64, "seed": seed},
+        "pipeline": pipe,
+        "seed": seed,
+    })
+    rep = run(spec)
+    assert rep.conservation == {"complete": n_requests}, rep.conservation
+    assert rep.all_complete
+    tokens = sum(r["tokens"] for c in rep.clusters.values()
+                 for r in c["replicas"].values())
+    assert rep.summary["n_completed"] == n_requests
+    # every completed request generated at least one token, all counted
+    # by exactly one replica
+    assert tokens >= n_requests
+    if "bubble_time_s" in rep.summary:
+        assert rep.summary["bubble_time_s"] >= 0.0

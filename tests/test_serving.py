@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import NO_RULES, build_model, init_tree
@@ -24,6 +25,7 @@ def _reference_greedy(cfg, params, prompt, n_new, max_seq):
     return out
 
 
+@pytest.mark.slow   # tier-2: real-model greedy decode (~13 s on CPU)
 def test_engine_matches_reference_greedy_decode():
     cfg = get_config("qwen2-7b", smoke=True)
     rng = np.random.default_rng(0)
