@@ -4,97 +4,146 @@
   (the practicality argument: exploring an 18k-GPU-hour config space needs
   a fast simulator);
 - Table-1 feature matrix exercised programmatically (PD, AF, PP/TP/DP/EP,
-  cross-cluster EP, pluggable scheduling) — each cell is an actual
-  simulation run.
+  cross-cluster EP, pluggable scheduling, prefix caching, preemption) —
+  each cell is an actual simulation run through the declarative
+  ``SimSpec -> run`` API.
 
 ``--smoke`` shrinks the workloads for CI (same code paths, seconds not
-minutes).
+minutes); ``--json PATH`` writes a machine-readable result file
+(events/s, wall time, per-cell status) — the benchmark artifact CI
+uploads to seed the perf trajectory.
 """
 from __future__ import annotations
 
 import argparse
-import time
-from typing import List
+import json
+from typing import Dict, List, Tuple
 
-from repro.configs import get_config
-from repro.core import A800_SXM4_80G, LinkSpec, ParallelismConfig
-from repro.core.policies.batching import ChunkedPrefill, ContinuousBatching
-from repro.core.routing import ZipfRouting
-from repro.core.workflows.af_disagg import build_af
-from repro.core.workflows.colocated import build_colocated
-from repro.core.workflows.pd_disagg import build_pd
-from repro.workload.generator import WorkloadConfig, generate
+from repro.api import SimSpec, run
 
 
-def run(smoke: bool = False) -> List[str]:
-    hw = A800_SXM4_80G
-    cfg = get_config("qwen2-7b")
-    lines = []
+def _spec(name: str, body: dict) -> SimSpec:
+    d = dict(body)
+    d["name"] = name
+    return SimSpec.from_dict(d)
 
-    # ---- scale: 16-replica cluster, 2000 requests --------------------------
+
+def _cells(n_cell: int) -> Dict[str, dict]:
+    wl = {"n_requests": n_cell, "rate": 20.0, "seed": 1}
+    moe = {"name": "mixtral-8x7b"}
+    return {
+        "pd": {
+            "topology": {"preset": "pd", "n_prefill": 2, "n_decode": 2,
+                         "prefill_tp": 2, "decode_tp": 2},
+            "workload": wl},
+        "af": {
+            "model": moe,
+            "topology": {"preset": "af", "m": 2, "attn_tp": 2, "ffn_ep": 8},
+            "policy": {"router": {"name": "zipf", "alpha": 1.1}},
+            "workload": wl},
+        "af_cross_cluster_ep": {
+            "model": moe,
+            "topology": {"preset": "af", "m": 2, "attn_tp": 2, "ffn_ep": 8,
+                         "remote_expert_ranks": [6, 7],
+                         "expert_link_bw": 25e9,
+                         "expert_link_latency": 5e-6},
+            "policy": {"router": {"name": "zipf", "alpha": 1.1}},
+            "workload": wl},
+        "tp_pp": {
+            "topology": {"preset": "colocated", "tp": 4, "pp": 2},
+            "workload": wl},
+        "dp": {
+            "topology": {"preset": "colocated", "n_replicas": 4},
+            "workload": wl},
+        "ep": {
+            "model": moe,
+            "topology": {"preset": "colocated", "tp": 8, "ep": 8},
+            "policy": {"router": "zipf"},
+            "workload": wl},
+        "sched_chunked_prefill": {
+            "topology": {"preset": "colocated"},
+            "policy": {"batching": {"name": "chunked_prefill",
+                                    "chunk": 256}},
+            "workload": wl},
+        "sched_continuous": {
+            "topology": {"preset": "colocated"},
+            "policy": {"batching": "continuous"},
+            "workload": wl},
+        "mem_prefix_cache": {
+            "topology": {"preset": "pd"},
+            "memory": {"manager": "prefix", "transfer_overlap": 0.8},
+            "workload": dict(wl, prefix_groups=4, prefix_len=512)},
+        "mem_preemption": {
+            "topology": {"preset": "pd"},
+            "memory": {"manager": "paged", "capacity_frac": 0.005,
+                       "preemption": "recompute"},
+            "workload": dict(wl, arrival="burst",
+                             burst_size=max(n_cell // 2, 1),
+                             prompt="fixed", prompt_mean=64,
+                             output="fixed", output_mean=1024)},
+    }
+
+
+def run_bench(smoke: bool = False) -> Tuple[List[str], dict]:
+    lines: List[str] = []
+    results: dict = {"smoke": smoke, "cells": {}}
+
+    # ---- scale: 16-replica cluster ----------------------------------------
     n_scale = 200 if smoke else 2000
-    wl = WorkloadConfig(n_requests=n_scale, rate=200.0, prompt_mean=512,
-                        output_mean=128, seed=0)
-    sys = build_colocated(cfg, hw, n_replicas=16,
-                          par=ParallelismConfig(tp=4))
-    t0 = time.perf_counter()
-    rep = sys.run(generate(wl))
-    wall = time.perf_counter() - t0
-    ev = sys.engine.processed
+    rep = run(_spec("sim-scale", {
+        "topology": {"preset": "colocated", "n_replicas": 16, "tp": 4},
+        "workload": {"n_requests": n_scale, "rate": 200.0,
+                     "prompt_mean": 512, "output_mean": 128, "seed": 0},
+    }))
+    ev, wall = rep.sim_events, rep.wall_clock_s
+    results["scale"] = {
+        "n_requests": n_scale, "events": ev, "wall_s": wall,
+        "events_per_s": ev / wall,
+        "sim_speedup": rep.sim_duration_s / wall,
+        "completed": rep.summary["n_completed"],
+    }
     lines.append(
         f"sim_scale_16replica_{n_scale}req,{wall * 1e6 / max(ev, 1):.2f},"
         f"events={ev};events_per_s={ev / wall:,.0f};"
-        f"sim_speedup={rep['duration_s'] / wall:.1f}x;"
-        f"completed={rep['n_completed']}")
+        f"sim_speedup={rep.sim_duration_s / wall:.1f}x;"
+        f"completed={rep.summary['n_completed']}")
 
-    # ---- Table-1 feature matrix --------------------------------------------
-    mcfg = get_config("mixtral-8x7b")
-    cells = {
-        "pd": lambda: build_pd(cfg, hw, n_prefill=2, n_decode=2,
-                               prefill_par=ParallelismConfig(tp=2),
-                               decode_par=ParallelismConfig(tp=2)),
-        "af": lambda: build_af(mcfg, hw, m=2,
-                               attn_par=ParallelismConfig(tp=2),
-                               ffn_par=ParallelismConfig(tp=1, ep=8),
-                               routing=ZipfRouting(1.1)),
-        "af_cross_cluster_ep": lambda: build_af(
-            mcfg, hw, m=2,
-            attn_par=ParallelismConfig(tp=2),
-            ffn_par=ParallelismConfig(tp=1, ep=8),
-            remote_expert_ranks=(6, 7),
-            expert_link=LinkSpec("decode", "experts", bandwidth=25e9,
-                                 latency=5e-6),
-            routing=ZipfRouting(1.1)),
-        "tp_pp": lambda: build_colocated(cfg, hw,
-                                         par=ParallelismConfig(tp=4, pp=2)),
-        "dp": lambda: build_colocated(cfg, hw, n_replicas=4),
-        "ep": lambda: build_colocated(mcfg, hw,
-                                      par=ParallelismConfig(tp=8, ep=8),
-                                      routing="zipf"),
-        "sched_chunked_prefill": lambda: build_colocated(
-            cfg, hw, policy=ChunkedPrefill(chunk=256)),
-        "sched_continuous": lambda: build_colocated(
-            cfg, hw, policy=ContinuousBatching()),
-    }
+    # ---- Table-1 feature matrix -------------------------------------------
     n_cell = 20 if smoke else 100
-    for name, builder in cells.items():
-        wl = WorkloadConfig(n_requests=n_cell, rate=20.0, seed=1)
-        t0 = time.perf_counter()
-        rep = builder().run(generate(wl))
-        wall = time.perf_counter() - t0
-        ok = rep["n_completed"] == n_cell
+    for name, body in _cells(n_cell).items():
+        rep = run(_spec(f"table1-{name}", body))
+        ok = rep.summary["n_completed"] == n_cell
+        results["cells"][name] = {
+            "supported": ok, "wall_s": rep.wall_clock_s,
+            "events": rep.sim_events,
+            "tok_s_per_device": rep.summary["throughput_tok_s_per_device"],
+            "ttft_p50_s": rep.summary["ttft_p50_s"],
+            "preemptions": rep.summary.get("preemptions", 0),
+            "prefix_hit_token_frac":
+                rep.summary.get("prefix_hit_token_frac"),
+        }
+        ttft = rep.summary["ttft_p50_s"]
         lines.append(
-            f"table1_{name},{wall * 1e6:.0f},"
+            f"table1_{name},{rep.wall_clock_s * 1e6:.0f},"
             f"supported={'yes' if ok else 'NO'};"
-            f"tok_s_dev={rep['throughput_tok_s_per_device']:.1f};"
-            f"ttft_p50={rep['ttft_p50_s'] * 1e3:.1f}ms")
-    return lines
+            f"tok_s_dev={rep.summary['throughput_tok_s_per_device']:.1f};"
+            f"ttft_p50={'n/a' if ttft is None else f'{ttft * 1e3:.1f}ms'}")
+    return lines, results
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small workloads for CI")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write machine-readable results (events/s, wall "
+                         "time, per-cell status) to PATH")
     args = ap.parse_args()
-    for l in run(smoke=args.smoke):
+    out_lines, out_results = run_bench(smoke=args.smoke)
+    for l in out_lines:
         print(l)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out_results, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")

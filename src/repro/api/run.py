@@ -88,6 +88,12 @@ def build(spec: SimSpec, *,
     common = dict(ops=ops, routing=pol.router, seed=spec.seed,
                   memory=pol.memory, queue_policy=pol.scheduler,
                   memoize=topo.memoize, pipeline=pipeline)
+    if spec.memory is not None:
+        # no memory section -> omit the kwargs so build_system's own
+        # defaults apply (one source of truth for the legacy values)
+        common.update(memory=spec.memory.manager_mapping(),
+                      transfer_overlap=spec.memory.transfer_overlap,
+                      kv_frac=spec.memory.capacity_frac)
 
     def batching(role: str, name: str = ""):
         try:
@@ -162,6 +168,30 @@ def _cluster_breakdown(handle: SystemHandle) -> Dict[str, Dict[str, Any]]:
             "utilization": cluster.utilization(now),
             "replicas": {w.name: dict(w.stats) for w in cluster.replicas},
         }
+        # memory-subsystem observability: per-cluster KV manager aggregates
+        mems = [w.memory for w in cluster.replicas if w.memory is not None]
+        if mems:
+            hit = sum(m.hit_tokens for m in mems)
+            prompt = sum(m.prompt_tokens for m in mems)
+            info["memory"] = {
+                "manager": type(mems[0]).name,
+                "total_blocks": sum(m.total_blocks for m in mems),
+                "utilization": (sum(m.utilization for m in mems)
+                                / len(mems)),
+                "peak_utilization": max(m.peak_utilization for m in mems),
+                "cached_blocks": sum(m.cached_blocks() for m in mems),
+                "preemptions": sum(w.stats.get("preemptions", 0)
+                                   for w in cluster.replicas),
+                "swap_outs": sum(w.stats.get("swap_outs", 0)
+                                 for w in cluster.replicas),
+                "swap_ins": sum(w.stats.get("swap_ins", 0)
+                                for w in cluster.replicas),
+                "evictions": sum(m.evictions for m in mems),
+                "evicted_blocks": sum(m.evicted_blocks for m in mems),
+                "prefix_hit_tokens": hit,
+                "prefix_prompt_tokens": prompt,
+                "prefix_hit_rate": (hit / prompt) if prompt else None,
+            }
         # AF expert-parallel observability: aggregate per-replica totals
         af: Dict[str, float] = {}
         for w in cluster.replicas:
@@ -227,6 +257,22 @@ def run(spec: SimSpec, *,
                                        for c in clusters.values()
                                        if "af" in c)
         summary["overlap_efficiency"] = max(1.0 - makespan / serial, 0.0)
+    # memory-subsystem observables: prefix-cache hits and exposed vs
+    # lump-sum KV-transfer time (PD layer-wise streaming); "preemptions"
+    # is already in the summary via SystemHandle.run
+    prompt_toks = sum(c["memory"]["prefix_prompt_tokens"]
+                      for c in clusters.values() if "memory" in c)
+    if prompt_toks:
+        hit_toks = sum(c["memory"]["prefix_hit_tokens"]
+                       for c in clusters.values() if "memory" in c)
+        summary["prefix_hit_token_frac"] = hit_toks / prompt_toks
+    ts = handle.controller.transfer_stats
+    if ts["transfers"]:
+        summary["kv_transfer_count"] = ts["transfers"]
+        summary["kv_transfer_serial_s"] = ts["serial_s"]
+        summary["kv_transfer_exposed_s"] = ts["exposed_s"]
+        summary["kv_transfer_exposed_frac"] = (
+            ts["exposed_s"] / ts["serial_s"] if ts["serial_s"] > 0 else 1.0)
     return Report(
         name=spec.name,
         spec=spec.to_dict(),

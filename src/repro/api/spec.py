@@ -35,7 +35,7 @@ from repro.core.pipeline import (
     AF_OVERLAP_MODES, PIPELINES, PipelineConfig, resolve_pipeline,
 )
 from repro.core.policies.batching import resolve_batching
-from repro.core.policies.memory import resolve_memory
+from repro.core.policies.memory import PREEMPTION_MODES, resolve_memory
 from repro.core.policies.scheduling import resolve_scheduler
 from repro.core.routing import resolve_router
 from repro.core.topology import ClusterSpec, ROLES, StageGraph
@@ -303,14 +303,18 @@ class WorkloadSpec:
     burst_size: int = 32           # arrival="burst": requests per burst
     burst_period: float = 1.0      # arrival="burst": seconds between bursts
     concurrency: Optional[int] = None   # arrival="closed": in-flight cap
+    prefix_groups: int = 0         # shared-prefix trace: system-prompt pools
+    prefix_len: int = 0            # shared tokens per group
+    turns: int = 1                 # multi-turn conversations (growing prefix)
+    turn_gap: float = 5.0          # seconds between a conversation's turns
     trace: Optional[str] = None    # JSONL replay path (overrides generator)
     seed: Optional[int] = None     # None -> SimSpec.seed
 
     def __post_init__(self) -> None:
-        _coerce(self, float, "rate", "burst_period")
+        _coerce(self, float, "rate", "burst_period", "turn_gap")
         _coerce(self, int, "n_requests", "prompt_mean", "prompt_max",
                 "output_mean", "output_max", "burst_size", "concurrency",
-                "seed")
+                "prefix_groups", "prefix_len", "turns", "seed")
 
     def validate(self) -> None:
         if self.arrival not in ARRIVALS:
@@ -333,6 +337,24 @@ class WorkloadSpec:
         if self.n_requests < 1:
             raise SpecError(f"workload.n_requests: must be >= 1, "
                             f"got {self.n_requests}")
+        if self.prefix_groups < 0 or self.prefix_len < 0:
+            raise SpecError("workload.prefix_groups/prefix_len: must be "
+                            ">= 0")
+        if self.prefix_groups > 0 and self.prefix_len < 1:
+            raise SpecError("workload.prefix_len: shared-prefix workloads "
+                            "(prefix_groups > 0) need prefix_len >= 1")
+        if self.turns < 1:
+            raise SpecError(f"workload.turns: must be >= 1, got {self.turns}")
+        if self.turns > 1 and self.prefix_groups > 0:
+            raise SpecError("workload: turns > 1 and prefix_groups > 0 are "
+                            "mutually exclusive (conversation prefixes "
+                            "already share)")
+        if self.turns > 1 and self.arrival == "closed":
+            raise SpecError(
+                "workload.arrival: closed-loop injection re-stamps arrivals "
+                "in queue order, putting a conversation's later turns in "
+                "flight before their history is generated — use an "
+                "open-loop arrival process with turns > 1")
 
     def build_requests(self, default_seed: int = 0):
         from repro.workload.generator import WorkloadConfig, generate, \
@@ -346,6 +368,8 @@ class WorkloadSpec:
             output=self.output, output_mean=self.output_mean,
             output_max=self.output_max, burst_size=self.burst_size,
             burst_period=self.burst_period, concurrency=self.concurrency,
+            prefix_groups=self.prefix_groups, prefix_len=self.prefix_len,
+            turns=self.turns, turn_gap=self.turn_gap,
             seed=self.seed if self.seed is not None else default_seed))
 
 
@@ -459,6 +483,67 @@ class PipelineSpec:
 
 
 @dataclass
+class MemorySpec:
+    """The KV-cache memory subsystem: manager, preemption, transfer.
+
+    - ``manager``: registered KV manager — ``"paged"`` (vLLM-style blocks),
+      ``"prefix"`` (radix prefix cache with block sharing + LRU eviction),
+      ``"monolithic"`` (per-request max-bound reservation) — or a mapping
+      ``{"name": ..., **kwargs}`` (block_tokens, watermark, ...).
+    - ``preemption``: what a decode OOM does to the evicted request —
+      ``"recompute"`` (drop KV, re-prefill the context through an entry
+      cluster) or ``"swap"`` (move KV to host over ``swap_bw`` and restore
+      in place when blocks free).
+    - ``transfer_overlap``: layer-wise streamed PD KV transfer — the
+      fraction of the streaming opportunity realized; 0 keeps the legacy
+      lump-sum transfer bit-for-bit.
+    - ``capacity_frac``: fraction of post-weight HBM given to the KV cache
+      (the cache-size knob for memory-pressure sweeps; default 0.9).
+    """
+    manager: Union[None, str, Dict[str, Any]] = None
+    preemption: str = "recompute"
+    swap_bw: float = 32e9
+    transfer_overlap: float = 0.0
+    capacity_frac: float = 0.9
+
+    def __post_init__(self) -> None:
+        _coerce(self, float, "swap_bw", "transfer_overlap", "capacity_frac")
+
+    def manager_mapping(self) -> Dict[str, Any]:
+        """The mapping build_system's ``memory=`` argument takes (manager
+        name + kwargs + the preemption policy that travels with it)."""
+        m = self.manager
+        if m is None:
+            m = {"name": "paged"}
+        elif isinstance(m, str):
+            m = {"name": m}
+        else:
+            m = dict(m)
+        m.setdefault("preemption", self.preemption)
+        m.setdefault("swap_bw", self.swap_bw)
+        return m
+
+    def validate(self) -> None:
+        if self.preemption not in PREEMPTION_MODES:
+            raise SpecError(f"memory.preemption: unknown mode "
+                            f"{self.preemption!r}; available: "
+                            f"{PREEMPTION_MODES}")
+        if not 0.0 <= self.transfer_overlap <= 1.0:
+            raise SpecError(f"memory.transfer_overlap: must be in [0, 1], "
+                            f"got {self.transfer_overlap}")
+        if not 0.0 < self.capacity_frac <= 1.0:
+            raise SpecError(f"memory.capacity_frac: must be in (0, 1], "
+                            f"got {self.capacity_frac}")
+        if self.swap_bw <= 0:
+            raise SpecError(f"memory.swap_bw: must be > 0, "
+                            f"got {self.swap_bw}")
+        try:
+            resolve_memory(self.manager_mapping())
+        except (KeyError, TypeError) as e:
+            raise SpecError(f"memory.manager: {e}") from e
+
+
+@dataclass
 class OpModelSpec:
     """Operator-model family for the ExecutionPredictor."""
     name: str = "analytical"
@@ -523,6 +608,7 @@ class SimSpec:
     policy: PolicySpec = field(default_factory=PolicySpec)
     opmodel: OpModelSpec = field(default_factory=OpModelSpec)
     pipeline: Optional[PipelineSpec] = None
+    memory: Optional[MemorySpec] = None
     slo: Optional[SLOSpec] = None
     faults: List[FaultSpec] = field(default_factory=list)
     seed: int = 0
@@ -542,6 +628,13 @@ class SimSpec:
         self.opmodel.validate()
         if self.pipeline is not None:
             self.pipeline.validate()
+        if self.memory is not None:
+            self.memory.validate()
+            if self.policy.memory is not None:
+                raise SpecError(
+                    "memory/policy.memory: both select a KV manager — use "
+                    "the 'memory' section (policy.memory is the legacy "
+                    "manager-only knob)")
         if self.slo is not None:
             self.slo.validate()
         names = self.topology.cluster_names()
@@ -592,6 +685,9 @@ class SimSpec:
                       if isinstance(d.get("pipeline"), str) else
                       _from_mapping(PipelineSpec, d.get("pipeline"),
                                     "pipeline")),
+            memory=(MemorySpec(manager=d["memory"])
+                    if isinstance(d.get("memory"), str) else
+                    _from_mapping(MemorySpec, d.get("memory"), "memory")),
             slo=_from_mapping(SLOSpec, d.get("slo"), "slo"),
             faults=[_from_mapping(FaultSpec, f, f"faults[{i}]")
                     for i, f in enumerate(d.get("faults") or [])],
@@ -655,7 +751,8 @@ def set_path(d: Dict[str, Any], path: str, value: Any) -> None:
     topology / workload / policy."""
     parts = path.split(".")
     if len(parts) == 1 and parts[0] not in d:
-        for section in ("topology", "workload", "policy", "pipeline"):
+        for section in ("topology", "workload", "policy", "pipeline",
+                        "memory"):
             sub = d.get(section)
             if isinstance(sub, Mapping) and parts[0] in sub:
                 parts = [section, parts[0]]

@@ -14,6 +14,10 @@ from repro.core.topology import (  # noqa: F401
     ClusterSpec, StageGraph, SystemHandle, build_system,
 )
 from repro.core.routing import ROUTERS, resolve_router  # noqa: F401
+from repro.core.policies.memory import (  # noqa: F401
+    MEMORY, KVCacheManager, KVTransferPlan, MonolithicKVManager,
+    PagedKVManager, PrefixCachingKVManager, resolve_memory,
+)
 from repro.core.pipeline import (  # noqa: F401
     PIPELINES, PipelineConfig, resolve_pipeline,
 )

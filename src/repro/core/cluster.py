@@ -6,7 +6,10 @@ cluster).  Its ClusterScheduler routes requests to ReplicaWorkers and
 participates in inter-stage coordination (memory-availability signaling for
 PD backpressure).  A ReplicaWorker simulates one model instance: it forms
 batches with a pluggable BatchingPolicy, prices them with the
-ExecutionPredictor, and advances request state on BATCH_DONE events.
+ExecutionPredictor, advances request state on BATCH_DONE events, and — when
+its KVCacheManager runs out of blocks mid-decode — preempts the
+lowest-priority resident requests (recompute or swap restore) instead of
+silently over-committing memory.
 """
 from __future__ import annotations
 
@@ -16,7 +19,7 @@ from typing import Callable, Dict, List, Optional
 from repro.core.engine import SimEngine
 from repro.core.events import EV, Event
 from repro.core.policies.batching import BatchingPolicy, BatchPlan
-from repro.core.policies.memory import PagedKVManager
+from repro.core.policies.memory import KVCacheManager
 from repro.core.policies.scheduling import FCFS, QueuePolicy
 from repro.core.predictor import ExecutionPredictor
 from repro.core.request import Request, RState
@@ -29,12 +32,13 @@ class Hooks:
     token_generated: Callable = lambda r, replica, t: None
     request_complete: Callable = lambda r, replica: None
     memory_available: Callable = lambda cluster, replica: None
+    preempted: Callable = lambda r, replica: None   # recompute re-routing
 
 
 class ReplicaWorker:
     def __init__(self, engine: SimEngine, name: str,
                  predictor: ExecutionPredictor, policy: BatchingPolicy,
-                 memory: Optional[PagedKVManager], hooks: Hooks, *,
+                 memory: Optional[KVCacheManager], hooks: Hooks, *,
                  role: str = "colocated", queue_policy: Optional[QueuePolicy] = None,
                  slowdown: float = 1.0, pipeline=None):
         self.engine = engine
@@ -49,6 +53,9 @@ class ReplicaWorker:
         self.slowdown = slowdown          # straggler factor (1.0 = healthy)
         self.waiting: List[Request] = []
         self.running: List[Request] = []  # decoding requests resident here
+        self.swapped: List[Request] = []  # preempted, KV on host, awaiting room
+        self._swapping_out: List[Request] = []  # swap-out transfer in flight
+        self._swapping_in: List[Request] = []   # admitted, swap-in in flight
         self.busy = False
         self.failed = False
         self._epoch = 0      # bumped on failure; stale BATCH_DONEs dropped
@@ -74,6 +81,7 @@ class ReplicaWorker:
     def _schedule(self) -> None:
         if self.busy or self.failed:
             return
+        self._try_swap_in()
         ordered = self.queue_policy.order(self.waiting, self.engine.now)
         plan = self.policy.plan(ordered, self.running, self.memory,
                                 self.engine.now)
@@ -105,6 +113,8 @@ class ReplicaWorker:
                 r.to(RState.PREFILL_RUNNING, self.engine.now)
                 # queueing-delay anchor: first time any replica scheduled it
                 r.timestamps.setdefault("first_scheduled", self.engine.now)
+                if r.prefill_started is None:   # current pass's residency
+                    r.prefill_started = self.engine.now
         for r in plan.decode:
             if r.state == RState.QUEUED_DECODE:
                 r.to(RState.DECODING, self.engine.now)
@@ -125,18 +135,25 @@ class ReplicaWorker:
         for r, chunk in plan.prefill:
             r.prefill_progress += chunk
             self.stats["prefill_tokens"] += chunk
-            if r.prefill_progress >= r.prompt_len:
+            if r.prefill_progress >= r.prefill_total:
                 self.waiting.remove(r)
                 r.to(RState.PREFILL_COMPLETE, now)
-                # prefill emits the first token
-                r.generated += 1
-                self.stats["tokens"] += 1
-                if r.first_token_time is None:
-                    r.first_token_time = now
-                self.hooks.token_generated(r, self, now)
+                if r.restore_pending:
+                    # recompute restore: the context (incl. every generated
+                    # token) is rebuilt — no new token is emitted
+                    r.restore_pending = False
+                else:
+                    # prefill emits the first token
+                    r.generated += 1
+                    self.stats["tokens"] += 1
+                    if r.first_token_time is None:
+                        r.first_token_time = now
+                    self.hooks.token_generated(r, self, now)
                 if self.role == "colocated":
-                    if self.memory is not None:
-                        self.memory.grow(r.rid, r.context_len)
+                    if (self.memory is not None
+                            and not self.memory.grow(r.rid, r.context_len)
+                            and not self._resolve_oom(r)):
+                        continue   # r was preempted; restore path owns it
                     r.to(RState.QUEUED_DECODE, now)
                     self.running.append(r)
                 else:
@@ -144,10 +161,12 @@ class ReplicaWorker:
             else:
                 r.to(RState.QUEUED_PREFILL, now)  # chunked: back to queue
         for r in plan.decode:
+            if r.state not in (RState.DECODING, RState.QUEUED_DECODE):
+                continue   # evicted by an earlier OOM this step (already
+                           # PREEMPTED, or re-queued for recompute); its
+                           # token is discarded and recomputed on restore
             r.generated += 1
             self.stats["tokens"] += 1
-            if self.memory is not None:
-                self.memory.grow(r.rid, r.context_len)
             self.hooks.token_generated(r, self, now)
             if r.done:
                 self.running.remove(r)
@@ -157,21 +176,134 @@ class ReplicaWorker:
                     self.memory.free(r.rid)
                     freed = True
                 self.hooks.request_complete(r, self)
+                continue
+            if (self.memory is not None
+                    and not self.memory.grow(r.rid, r.context_len)):
+                self._resolve_oom(r)
         if freed:
+            self._try_swap_in()
             self.hooks.memory_available(self.cluster, self)
+        self.kick()
+
+    # ----------------------------------------------------------- preemption --
+    def _pick_victim(self, exclude: Request) -> Optional[Request]:
+        """Lowest-priority resident: the latest-arrived decoding request
+        (vLLM's preemption order), never the one we are growing."""
+        candidates = [v for v in self.running
+                      if v is not exclude
+                      and v.state in (RState.DECODING, RState.QUEUED_DECODE)]
+        if not candidates:
+            return None
+        return max(candidates, key=lambda v: (v.arrival, v.rid))
+
+    def _resolve_oom(self, r: Request) -> bool:
+        """Decode OOM: evict lowest-priority residents until r's KV fits.
+
+        Returns True when r keeps its residency; False when r itself had
+        to be preempted (no other victim remained and even the watermark
+        reserve could not absorb the growth).
+        """
+        while not self.memory.grow(r.rid, r.context_len):
+            victim = self._pick_victim(exclude=r)
+            if victim is None:
+                # r is the only resident: dip into the reserve before
+                # giving up — preempting it could never make progress
+                if self.memory.grow(r.rid, r.context_len,
+                                    ignore_watermark=True):
+                    return True
+                self._preempt(r)
+                return False
+            self._preempt(victim)
+        return True
+
+    def _preempt(self, r: Request) -> None:
+        now = self.engine.now
+        if self.memory.blocks_for(r.prompt_len + r.output_len) \
+                > self.memory.total_blocks:
+            # restoring could never succeed: the request's maximum context
+            # exceeds the whole pool — fail loudly instead of cycling
+            # preempt/readmit forever or silently stranding the request
+            raise RuntimeError(
+                f"replica {self.name}: request {r.rid} needs "
+                f"{self.memory.blocks_for(r.prompt_len + r.output_len)} KV "
+                f"blocks for its full context but the pool has only "
+                f"{self.memory.total_blocks}; raise memory capacity "
+                f"(capacity_frac) or shorten the workload")
+        swap = self.memory.preemption == "swap"
+        if r in self.running:
+            self.running.remove(r)
+        # recompute drops the KV; only the declared shared prefix stays
+        # resident (ref-counted cache, full_extent=False).  A swap moves
+        # the WHOLE KV to host, so the device must not also fold it into
+        # the prefix cache (that would hold the same bytes twice once
+        # swap-in re-reserves them)
+        self.memory.free(r.rid, insert=not swap, full_extent=False)
+        r.to(RState.PREEMPTED, now)
+        r.preemptions += 1
+        self.stats["preemptions"] = self.stats.get("preemptions", 0) + 1
+        if swap:
+            dt = self.memory.swap_time(r.context_len)
+            self.stats["swap_outs"] = self.stats.get("swap_outs", 0) + 1
+            self.stats["swap_time_s"] = \
+                self.stats.get("swap_time_s", 0.0) + dt
+            self._swapping_out.append(r)
+            self.engine.after(dt, EV.SWAP_OUT_DONE,
+                              lambda ev, r=r, epoch=self._epoch:
+                              self._swap_out_done(r, epoch),
+                              rid=r.rid, replica=self.name)
+        else:  # recompute: KV is gone; re-prefill through an entry cluster
+            r.begin_recompute(now)
+            self.hooks.preempted(r, self)
+
+    def _swap_out_done(self, r: Request, epoch: int) -> None:
+        if epoch != self._epoch:
+            return   # replica failed mid-swap; fail() re-routed the request
+        self._swapping_out.remove(r)
+        self.swapped.append(r)
+        self._try_swap_in()
+
+    def _try_swap_in(self) -> None:
+        """Restore swapped-out requests (oldest first) as memory allows."""
+        if not self.swapped or self.memory is None:
+            return
+        still: List[Request] = []
+        for r in sorted(self.swapped, key=lambda r: (r.arrival, r.rid)):
+            if self.memory.admit(r.rid, r.context_len,
+                                 max_tokens=r.prompt_len + r.output_len):
+                dt = self.memory.swap_time(r.context_len)
+                self.stats["swap_ins"] = self.stats.get("swap_ins", 0) + 1
+                self.stats["swap_time_s"] = \
+                    self.stats.get("swap_time_s", 0.0) + dt
+                self._swapping_in.append(r)
+                self.engine.after(dt, EV.SWAP_IN_DONE,
+                                  lambda ev, r=r, epoch=self._epoch:
+                                  self._swap_in_done(r, epoch),
+                                  rid=r.rid, replica=self.name)
+            else:
+                still.append(r)
+        self.swapped = still
+
+    def _swap_in_done(self, r: Request, epoch: int) -> None:
+        if epoch != self._epoch:
+            return
+        self._swapping_in.remove(r)
+        r.to(RState.QUEUED_DECODE, self.engine.now)
+        self.running.append(r)
         self.kick()
 
     # ------------------------------------------------------------ failures --
     def fail(self, downtime: float) -> List[Request]:
         """Replica failure: running work is lost and must be re-routed."""
         self.failed = True
-        self._epoch += 1      # invalidate any in-flight BATCH_DONE
+        self._epoch += 1      # invalidate any in-flight BATCH_DONE/swap
         self.busy = False
-        lost = self.waiting + self.running
+        lost = (self.waiting + self.running + self.swapped
+                + self._swapping_out + self._swapping_in)
         self.waiting, self.running = [], []
+        self.swapped, self._swapping_out, self._swapping_in = [], [], []
         if self.memory is not None:
             for r in lost:
-                self.memory.free(r.rid)
+                self.memory.free(r.rid, insert=False)
         self.engine.after(downtime, EV.REPLICA_RECOVERED,
                           lambda ev: self._recover(), replica=self.name)
         return lost
@@ -204,13 +336,14 @@ class ClusterWorker:
         w = min(healthy, key=lambda w: (w.load(), w.name))
         return w
 
-    def replica_with_memory(self, tokens: int) -> Optional[ReplicaWorker]:
+    def replica_with_memory(self, r: Request) -> Optional[ReplicaWorker]:
         """For pull-based KV transfer: who can host this request's KV?"""
         best, best_load = None, None
         for w in self.replicas:
             if w.failed or w.memory is None:
                 continue
-            if w.memory.can_admit(tokens):
+            if w.memory.can_admit(r.context_len,
+                                  max_tokens=r.prompt_len + r.output_len):
                 l = w.load()
                 if best is None or l < best_load:
                     best, best_load = w, l

@@ -20,6 +20,7 @@ from repro.core.engine import SimEngine
 from repro.core.events import EV
 from repro.core.hardware import LinkSpec
 from repro.core.metrics import MetricsCollector
+from repro.core.policies.memory import KVTransferPlan
 from repro.core.request import Request, RState
 
 
@@ -31,7 +32,9 @@ class GlobalController:
                  transfer_bw: float = 25e9,
                  metrics: Optional[MetricsCollector] = None,
                  links: Optional[Dict[Tuple[str, str], LinkSpec]] = None,
-                 entry: Optional[List[str]] = None):
+                 entry: Optional[List[str]] = None,
+                 kv_layers: int = 1,
+                 transfer_overlap: float = 0.0):
         self.engine = engine
         self.mode = mode
         self.clusters = clusters
@@ -43,6 +46,13 @@ class GlobalController:
         self.links = links or {}
         # entry cluster names for arrivals; None -> legacy mode-based lookup
         self.entry = entry
+        # layer-wise streamed KV transfer: per-layer chunks pipeline behind
+        # remaining prefill compute; overlap=0 keeps the legacy lump-sum
+        # pricing bit-for-bit
+        self.kv_layers = max(kv_layers, 1)
+        self.transfer_overlap = transfer_overlap
+        self.transfer_stats = {"transfers": 0, "bytes": 0.0,
+                               "serial_s": 0.0, "exposed_s": 0.0}
         self.pending_transfer: List[Request] = []   # PREFILL_COMPLETE queue
         self.prefill_home: Dict[int, ReplicaWorker] = {}
         self.requests: Dict[int, Request] = {}
@@ -56,6 +66,7 @@ class GlobalController:
             token_generated=self.metrics.on_token,
             request_complete=self.on_request_complete,
             memory_available=self.on_memory_available,
+            preempted=self.on_preempted,
         )
 
     # ------------------------------------------------------------ arrivals --
@@ -126,6 +137,34 @@ class GlobalController:
             return link.transfer_time(nbytes)
         return nbytes / self.transfer_bw if self.transfer_bw else 0.0
 
+    def _transfer_exposed(self, src: Optional[str], dst: str,
+                          nbytes: float, r: Request) -> Tuple[float, float]:
+        """Price one KV transfer: (exposed_time, serial_time).
+
+        With ``transfer_overlap > 0`` the KV streams layer-by-layer over
+        the link during the producing prefill's residency window, so only
+        the un-hidden tail is exposed; overlap=0 takes the legacy lump-sum
+        path verbatim (identical event timing, serial == exposed).
+        """
+        if self.transfer_overlap <= 0.0 or self.kv_layers <= 1:
+            dt = self._transfer_time(src, dst, nbytes)
+            return dt, dt
+        link = self.links.get((src, dst)) if src is not None else None
+        bw = link.bandwidth if link is not None else self.transfer_bw
+        lat = link.latency if link is not None else 0.0
+        plan = KVTransferPlan(
+            n_layers=self.kv_layers,
+            bytes_per_layer=nbytes / self.kv_layers,
+            bandwidth=bw, latency=lat, overlap=self.transfer_overlap)
+        # the streaming window is the CURRENT prefill pass's compute span
+        # only: first schedule -> prefill completion.  Neither a recompute-
+        # restored request's earlier lifetime nor time spent backpressured
+        # in pending_transfer can hide bytes — no decode target held memory
+        # for the chunks to stream into during the wait.
+        done = r.timestamps.get("prefill_complete", self.engine.now)
+        start = r.prefill_started if r.prefill_started is not None else done
+        return plan.exposed_time(done - start), plan.serial_time
+
     def _try_transfers(self) -> None:
         """Initiate KV transfers for as many queued requests as decode
         memory allows (system-level backpressure).  With multiple decode
@@ -140,7 +179,7 @@ class GlobalController:
             target, target_cluster = None, None
             best_load = None
             for pool in decode_pools:
-                w = pool.replica_with_memory(r.context_len)
+                w = pool.replica_with_memory(r)
                 if w is None:
                     continue
                 l = w.load()
@@ -149,14 +188,24 @@ class GlobalController:
             if target is None:
                 remaining.append(r)        # backpressured
                 continue
-            admitted = target.memory.admit(r.rid, r.context_len)
+            admitted = target.memory.admit(
+                r.rid, r.context_len,
+                max_tokens=r.prompt_len + r.output_len)
             assert admitted
             r.to(RState.KV_TRANSFER, self.engine.now)
-            nbytes = self.kv_bytes_per_token * r.prompt_len
+            # everything the prefill pass (re)built crosses the link: the
+            # prompt's KV, or the full restored context after a recompute
+            # preemption (prefill_total == prompt_len for fresh requests)
+            nbytes = self.kv_bytes_per_token * r.prefill_total
             src = self.prefill_home.get(r.rid)
             src_name = src.cluster.name if src is not None and src.cluster \
                 else None
-            dt = self._transfer_time(src_name, target_cluster.name, nbytes)
+            dt, serial = self._transfer_exposed(
+                src_name, target_cluster.name, nbytes, r)
+            self.transfer_stats["transfers"] += 1
+            self.transfer_stats["bytes"] += nbytes
+            self.transfer_stats["serial_s"] += serial
+            self.transfer_stats["exposed_s"] += dt
             self._transfers_in_flight += 1
             self.engine.after(
                 dt, EV.KV_TRANSFER_DONE,
@@ -171,6 +220,13 @@ class GlobalController:
             src.memory.free(r.rid)
             src.kick()                      # prefill can admit more work
         target.start_decode(r)
+
+    # ---------------------------------------------------------- preemption --
+    def on_preempted(self, r: Request, replica: ReplicaWorker) -> None:
+        """Recompute restore: the request re-enters prefill at the least
+        loaded entry cluster (its KV is gone; swap restores stay local to
+        the replica and never reach this hook)."""
+        self._arrive(r)
 
     # ------------------------------------------------------------- endings --
     def on_request_complete(self, r: Request, replica: ReplicaWorker) -> None:
@@ -192,10 +248,14 @@ class GlobalController:
                 if r.state in (RState.QUEUED_PREFILL, RState.PREFILL_RUNNING):
                     r.state = RState.QUEUED_PREFILL
                     cluster.route(r).enqueue_prefill(r)
-                elif r.state in (RState.DECODING, RState.QUEUED_DECODE):
+                elif r.state in (RState.DECODING, RState.QUEUED_DECODE,
+                                 RState.PREEMPTED):
                     r.state = RState.QUEUED_PREFILL
                     r.prefill_progress = 0
                     r.generated = 0
+                    r.prefill_len = None
+                    r.restore_pending = False
+                    r.prefill_started = None
                     self._arrive(r)
         self.engine.at(at, EV.REPLICA_FAILURE, do_fail,
                        cluster=cluster_name, replica=replica_idx)

@@ -27,6 +27,9 @@ class EV(enum.Enum):
     BATCH_START = "batch_start"
     BATCH_DONE = "batch_done"
     MEMORY_AVAILABLE = "memory_available"
+    # preemption/restore (KV swapped to host memory and back)
+    SWAP_OUT_DONE = "swap_out_done"
+    SWAP_IN_DONE = "swap_in_done"
     SCHEDULE_TICK = "schedule_tick"
     REPLICA_FAILURE = "replica_failure"
     REPLICA_RECOVERED = "replica_recovered"

@@ -67,6 +67,10 @@ class MetricsCollector:
             "e2e_p50_s": _pct(e2es, 50), "e2e_p99_s": _pct(e2es, 99),
             "queue_mean_s": _mean(queues),
             "queue_p50_s": _pct(queues, 50), "queue_p99_s": _pct(queues, 99),
+            # preemption/restore observability (memory-pressure dynamics)
+            "preempted_requests": sum(1 for r in self.completed
+                                      if r.preemptions > 0),
+            "request_preemptions": sum(r.preemptions for r in self.completed),
         }
         if slo_ttft is not None and slo_tpot is not None and self.completed:
             good = [r for r in self.completed

@@ -58,13 +58,17 @@ class ContinuousBatching(BatchingPolicy):
         seqs = len(decode)
         prefill: List[Tuple[Request, int]] = []
         for r in waiting:
-            remaining = r.prompt_len - r.prefill_progress
-            if remaining <= 0:
+            if r.prefill_total - r.prefill_progress <= 0:
                 continue
+            # probe the prefix cache first: a hit shrinks the tokens this
+            # prefill actually computes (admit_request applies it)
+            hit = memory.prefix_hit(r) if memory is not None else 0
+            remaining = r.prefill_total - max(r.prefill_progress, hit)
             if seqs >= self.max_num_seqs or remaining > budget:
                 break  # FCFS head-of-line: vLLM admits in order
-            if memory is not None and not memory.admit(r.rid, r.prompt_len):
+            if memory is not None and not memory.admit_request(r):
                 break  # backpressure: no KV space
+            remaining = r.prefill_total - r.prefill_progress
             prefill.append((r, remaining))
             budget -= remaining
             seqs += 1
@@ -87,15 +91,18 @@ class ChunkedPrefill(BatchingPolicy):
         seqs = len(decode)
         prefill: List[Tuple[Request, int]] = []
         # continue partially-prefilled requests first (Sarathi)
-        in_flight = [r for r in waiting if 0 < r.prefill_progress < r.prompt_len]
+        in_flight = [r for r in waiting
+                     if 0 < r.prefill_progress < r.prefill_total]
         fresh = [r for r in waiting if r.prefill_progress == 0]
         for r in in_flight + fresh:
             if budget <= 0 or seqs >= self.max_num_seqs:
                 break
             if r.prefill_progress == 0 and memory is not None \
-                    and not memory.admit(r.rid, r.prompt_len):
+                    and not memory.admit_request(r):
                 break
-            take = min(self.chunk, r.prompt_len - r.prefill_progress, budget)
+            # admit_request advances prefill_progress past any prefix hit
+            take = min(self.chunk, r.prefill_total - r.prefill_progress,
+                       budget)
             if take <= 0:
                 break
             prefill.append((r, take))
@@ -117,9 +124,9 @@ class StaticBatching(BatchingPolicy):
             return BatchPlan([], decode)
         prefill = []
         for r in list(waiting)[: self.batch_size]:
-            if memory is not None and not memory.admit(r.rid, r.prompt_len):
+            if memory is not None and not memory.admit_request(r):
                 break
-            prefill.append((r, r.prompt_len))
+            prefill.append((r, r.prefill_total - r.prefill_progress))
         return BatchPlan(prefill, [])
 
 

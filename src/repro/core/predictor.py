@@ -102,10 +102,17 @@ class ExecutionPredictor:
         return dtype_bytes * n / max(self.par.tp * self.par.pp, 1)
 
     def kv_bytes_per_token(self) -> float:
+        return self.kv_bytes_per_token_per_layer() * self.kv_layer_count()
+
+    def kv_layer_count(self) -> int:
+        """Attention layers holding KV — the chunk count for layer-wise
+        streamed KV transfer (recurrent layers carry no paged KV)."""
+        return sum(1 for k in self.cfg.pattern
+                   if k in (ATTN_GLOBAL, ATTN_LOCAL))
+
+    def kv_bytes_per_token_per_layer(self) -> float:
         cfg = self.cfg
-        per_layer = 2 * cfg.num_kv_heads * cfg.resolved_head_dim * 2  # bf16 k+v
-        n_attn = sum(1 for k in cfg.pattern if k in (ATTN_GLOBAL, ATTN_LOCAL))
-        return per_layer * n_attn
+        return 2 * cfg.num_kv_heads * cfg.resolved_head_dim * 2  # bf16 k+v
 
     # ------------------------------------------------------------- layers --
     def _attn_layer(self, kind: str, q_lens: Sequence[int],

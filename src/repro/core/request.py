@@ -13,6 +13,7 @@ class RState(enum.Enum):
     KV_TRANSFER = "kv_transfer"
     QUEUED_DECODE = "queued_decode"
     DECODING = "decoding"
+    PREEMPTED = "preempted"                 # KV evicted under memory pressure
     COMPLETE = "complete"
 
 
@@ -20,10 +21,15 @@ class RState(enum.Enum):
 _TRANSITIONS = {
     RState.QUEUED_PREFILL: {RState.PREFILL_RUNNING},
     RState.PREFILL_RUNNING: {RState.PREFILL_COMPLETE, RState.QUEUED_PREFILL},
-    RState.PREFILL_COMPLETE: {RState.KV_TRANSFER, RState.QUEUED_DECODE},
+    RState.PREFILL_COMPLETE: {RState.KV_TRANSFER, RState.QUEUED_DECODE,
+                              RState.PREEMPTED},
     RState.KV_TRANSFER: {RState.QUEUED_DECODE},
-    RState.QUEUED_DECODE: {RState.DECODING},
-    RState.DECODING: {RState.COMPLETE, RState.QUEUED_DECODE},
+    RState.QUEUED_DECODE: {RState.DECODING, RState.PREEMPTED},
+    RState.DECODING: {RState.COMPLETE, RState.QUEUED_DECODE,
+                      RState.PREEMPTED},
+    # restore paths: recompute re-prefills the full context; swap-in
+    # returns the request straight to the decode queue
+    RState.PREEMPTED: {RState.QUEUED_PREFILL, RState.QUEUED_DECODE},
 }
 
 
@@ -36,6 +42,18 @@ class Request:
     state: RState = RState.QUEUED_PREFILL
     generated: int = 0
     prefill_progress: int = 0          # chunked-prefill bookkeeping
+    # prefix sharing (set by the workload generator): requests with the
+    # same prefix_id share their first prefix_len prompt tokens
+    prefix_id: Optional[int] = None
+    prefix_len: int = 0
+    # preemption/restore bookkeeping
+    prefill_len: Optional[int] = None  # recompute target; None -> prompt_len
+    restore_pending: bool = False      # next prefill completion is a restore
+    preemptions: int = 0
+    # when the CURRENT prefill pass was first scheduled (reset on recompute
+    # restore) — the residency anchor for streamed-KV-transfer windows;
+    # "first_scheduled" in timestamps keeps the lifetime queue-delay anchor
+    prefill_started: Optional[float] = None
     timestamps: Dict[str, float] = field(default_factory=dict)
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
@@ -53,8 +71,25 @@ class Request:
         return self.prompt_len + self.generated
 
     @property
+    def prefill_total(self) -> int:
+        """Tokens this request's (next) prefill must process: the prompt,
+        or the full context when restoring after a recompute preemption."""
+        return self.prefill_len if self.prefill_len is not None \
+            else self.prompt_len
+
+    @property
     def done(self) -> bool:
         return self.generated >= self.output_len
+
+    def begin_recompute(self, now: float) -> None:
+        """Recompute-restore a PREEMPTED request: the KV is gone, so the
+        whole current context (prompt + generated tokens) re-prefills; no
+        token is re-emitted when that prefill completes."""
+        self.prefill_len = self.context_len
+        self.prefill_progress = 0
+        self.restore_pending = True
+        self.prefill_started = None
+        self.to(RState.QUEUED_PREFILL, now)
 
     # ---- metrics -----------------------------------------------------
     def ttft(self) -> Optional[float]:

@@ -72,16 +72,27 @@ class SystemHandle:
         else:
             self.controller.submit_all(requests)
         self.engine.run(until)
-        return self.controller.metrics.report(
+        rep = self.controller.metrics.report(
             n_devices=self.n_devices, slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+        rep["preemptions"] = sum(w.stats.get("preemptions", 0)
+                                 for c in self.clusters.values()
+                                 for w in c.replicas)
+        return rep
 
 
 def _kv_budget(cfg: ModelConfig, hw: HardwareSpec, par: ParallelismConfig,
                pred: ExecutionPredictor, frac: float = 0.9) -> float:
-    """KV memory per replica = devices*(HBM - weights) * frac."""
+    """KV memory per replica = devices*(HBM - weights) * frac.
+
+    ``frac`` is the cache-size knob (``MemorySpec.capacity_frac``): the
+    fraction of post-weight HBM given to the KV cache — sweeping it down
+    simulates memory pressure without changing the hardware.
+    """
     total = hw.hbm_capacity * par.devices
     weights = 2.0 * cfg.param_count()
-    return max((total - weights) * frac, hw.hbm_capacity * 0.05)
+    # the floor scales with frac too (frac=0.9 keeps the legacy 5% floor),
+    # so capacity_frac sweeps stay monotone even when weights dominate
+    return max((total - weights) * frac, hw.hbm_capacity * frac / 18.0)
 
 
 @dataclass
@@ -193,18 +204,23 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
                  queue_policy: Union[None, str, dict, "QueuePolicy"] = None,
                  seed: int = 0,
                  pipeline: Union[None, str, dict, PipelineConfig] = None,
+                 transfer_overlap: float = 0.0,
+                 kv_frac: float = 0.9,
                  ) -> SystemHandle:
     """Compile a StageGraph into a runnable SystemHandle.
 
     ``hw``/``ops`` are the topology defaults; a ClusterSpec with its own
     ``hardware`` gets a fresh analytical OperatorModelSet for it (pass a
     custom ``ops`` only for homogeneous-hardware clusters).  ``memory``
-    ("paged"/"monolithic" + kwargs) and ``queue_policy`` ("fcfs"/"sjf"/
-    "priority") select registered KV-manager and queue-ordering policies
-    for every replica.  ``pipeline`` (name / mapping / PipelineConfig)
-    selects the latency-hiding strategy for every cluster that does not
-    carry its own ``ClusterSpec.pipeline``; None keeps the legacy serial
-    model bit-for-bit.
+    ("paged"/"prefix"/"monolithic" + kwargs incl. preemption/swap_bw) and
+    ``queue_policy`` ("fcfs"/"sjf"/"priority") select registered KV-manager
+    and queue-ordering policies for every replica.  ``pipeline`` (name /
+    mapping / PipelineConfig) selects the latency-hiding strategy for every
+    cluster that does not carry its own ``ClusterSpec.pipeline``; None
+    keeps the legacy serial model bit-for-bit.  ``transfer_overlap`` in
+    (0, 1] switches PD KV handoffs to layer-wise streamed transfer
+    (0 keeps the legacy lump-sum pricing bit-for-bit); ``kv_frac`` sets
+    the fraction of post-weight HBM given to the KV cache.
     """
     from repro.core.policies.memory import resolve_memory
     from repro.core.policies.scheduling import resolve_scheduler
@@ -231,7 +247,9 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
         transfer_bw=transfer_bw if transfer_bw is not None
         else hw.inter_node_bw,
         metrics=metrics, links=graph.link_table(),
-        entry=graph.entry_clusters)
+        entry=graph.entry_clusters,
+        kv_layers=pred0.kv_layer_count(),
+        transfer_overlap=transfer_overlap)
     hooks = controller.hooks()
 
     clusters: Dict[str, ClusterWorker] = {}
@@ -269,7 +287,7 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
                 pred = ExecutionPredictor(cfg, spec.par, hw_c, ops_c,
                                           routing=routing, seed=rseed,
                                           memoize=spec.memoize)
-            mem = mem_cls(_kv_budget(cfg, hw_c, spec.par, pred),
+            mem = mem_cls(_kv_budget(cfg, hw_c, spec.par, pred, frac=kv_frac),
                           pred.kv_bytes_per_token(), **mem_kw)
             replicas.append(ReplicaWorker(
                 engine, f"{prefix}{i}", pred,

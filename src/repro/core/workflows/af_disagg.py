@@ -403,7 +403,8 @@ def build_af(cfg: ModelConfig, hw: HardwareSpec, *,
              expert_link: Optional[LinkSpec] = None,
              memory=None, queue_policy=None,
              memoize: bool = True,
-             pipeline=None):
+             pipeline=None, transfer_overlap: float = 0.0,
+             kv_frac: float = 0.9):
     """PD front + AF-disaggregated decode (as deployed by MegaScale-Infer).
 
     .. deprecated::
@@ -433,4 +434,5 @@ def build_af(cfg: ModelConfig, hw: HardwareSpec, *,
     ])
     return build_system(cfg, hw, graph, ops=ops, routing=routing,
                         memory=memory, queue_policy=queue_policy, seed=seed,
-                        pipeline=pipeline)
+                        pipeline=pipeline, transfer_overlap=transfer_overlap,
+                        kv_frac=kv_frac)

@@ -27,7 +27,8 @@ def build_colocated(cfg: ModelConfig, hw: HardwareSpec, *,
                     routing=None, seed: int = 0,
                     memory=None, queue_policy=None,
                     memoize: bool = True,
-                    pipeline=None) -> SystemHandle:
+                    pipeline=None, transfer_overlap: float = 0.0,
+                    kv_frac: float = 0.9) -> SystemHandle:
     """Colocated preset.
 
     .. deprecated::
@@ -44,4 +45,5 @@ def build_colocated(cfg: ModelConfig, hw: HardwareSpec, *,
     return build_system(cfg, hw, graph, ops=ops, routing=routing,
                         engine=engine, memory=memory,
                         queue_policy=queue_policy, seed=seed,
-                        pipeline=pipeline)
+                        pipeline=pipeline, transfer_overlap=transfer_overlap,
+                        kv_frac=kv_frac)

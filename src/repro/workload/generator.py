@@ -30,6 +30,21 @@ class WorkloadConfig:
     # next request is injected when a slot frees (controller-driven — the
     # generator only stamps placeholder t=0 arrivals, re-stamped at run time)
     concurrency: Optional[int] = None
+    # shared-prefix traces (prefix caching has something to hit): each
+    # request joins one of `prefix_groups` system-prompt groups and its
+    # prompt is prefix_len shared tokens + the drawn unique suffix
+    prefix_groups: int = 0
+    prefix_len: int = 0
+    # multi-turn conversations: n_requests are grouped into conversations
+    # of `turns` turns; turn t's prompt is the full history (a growing
+    # shared prefix) + a fresh drawn user turn, arriving turn_gap apart.
+    # Open-loop approximation: turns arrive on the fixed gap even if the
+    # previous turn is still decoding — pick turn_gap above the expected
+    # per-turn latency, or the growing prefix will not be cached yet and
+    # the history prefills as fresh compute (hit rates degrade honestly
+    # under congestion, as an impatient client's would)
+    turns: int = 1
+    turn_gap: float = 5.0
     seed: int = 0
 
 
@@ -75,9 +90,49 @@ def generate(cfg: WorkloadConfig) -> List[Request]:
                          f"known: {ARRIVALS}")
     plens = _lengths(cfg.prompt, cfg.prompt_mean, cfg.prompt_max, n, rng)
     olens = _lengths(cfg.output, cfg.output_mean, cfg.output_max, n, rng)
-    return [Request(rid=i, arrival=float(arrivals[i]),
+    if cfg.turns > 1 and cfg.prefix_groups > 0:
+        raise ValueError("turns > 1 and prefix_groups > 0 are mutually "
+                         "exclusive workload shapes")
+    if cfg.turns > 1:
+        return _multiturn(cfg, arrivals, plens, olens)
+    reqs = [Request(rid=i, arrival=float(arrivals[i]),
                     prompt_len=int(plens[i]), output_len=max(int(olens[i]), 1))
             for i in range(n)]
+    if cfg.prefix_groups > 0:
+        # drawn AFTER lengths so prefix-free workloads replay bit-for-bit
+        groups = rng.integers(0, cfg.prefix_groups, n)
+        for r, g in zip(reqs, groups):
+            r.prefix_id = int(g)
+            r.prefix_len = int(cfg.prefix_len)
+            r.prompt_len += int(cfg.prefix_len)   # shared system prompt
+    return reqs
+
+
+def _multiturn(cfg: WorkloadConfig, arrivals, plens, olens) -> List[Request]:
+    """Conversation traces: consecutive turns share an ever-growing prefix
+    (the full prior history), the natural prey of a radix prefix cache."""
+    n, turns = cfg.n_requests, cfg.turns
+    n_conv = max((n + turns - 1) // turns, 1)
+    reqs: List[Request] = []
+    rid = 0
+    for c in range(n_conv):
+        # conversation c starts when its first request would have arrived,
+        # preserving the configured offered rate in requests/s (starting
+        # every conversation at arrivals[c] would multiply load by `turns`)
+        at = float(arrivals[min(c * turns, n - 1)])
+        history = 0
+        for _ in range(turns):
+            if rid >= n:
+                break
+            prompt = history + int(plens[rid])
+            out = max(int(olens[rid]), 1)
+            reqs.append(Request(
+                rid=rid, arrival=at, prompt_len=prompt, output_len=out,
+                prefix_id=1_000_000 + c, prefix_len=history))
+            history = prompt + out
+            at += max(cfg.turn_gap, 0.0)
+            rid += 1
+    return reqs
 
 
 def fixed_batch(n: int, prompt_len: int, output_len: int) -> List[Request]:

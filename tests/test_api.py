@@ -342,7 +342,7 @@ def test_policy_registries_resolve_uniformly():
     assert isinstance(resolve_scheduler("sjf"), SJF)
     with pytest.raises(KeyError):
         resolve_scheduler("lifo")
-    assert set(MEMORY) == {"paged", "monolithic"}
+    assert set(MEMORY) == {"paged", "prefix", "monolithic"}
     cls, kw = resolve_memory({"name": "paged", "block_tokens": 32})
     assert kw == {"block_tokens": 32}
     with pytest.raises(KeyError):

@@ -45,6 +45,22 @@ SPECS = {
         "pipeline": {"preset": "two_batch", "ep_overlap": 0.5},
         "seed": 13,
     },
+    # the memory subsystem end-to-end: prefix-caching manager on a
+    # shared-prefix workload, layer-wise streamed KV transfer, and a
+    # capacity small enough that decode growth preempts (recompute)
+    "memory_pd": {
+        "name": "golden-memory-pd",
+        "model": {"name": "qwen2-7b", "smoke": True},
+        "topology": {"preset": "pd", "n_prefill": 1, "n_decode": 1},
+        "workload": {"n_requests": 40, "arrival": "burst", "burst_size": 20,
+                     "burst_period": 2.0, "prompt": "fixed",
+                     "prompt_mean": 128, "output": "fixed",
+                     "output_mean": 1024, "prefix_groups": 4,
+                     "prefix_len": 512, "seed": 14},
+        "memory": {"manager": "prefix", "capacity_frac": 0.0001,
+                   "preemption": "recompute", "transfer_overlap": 0.8},
+        "seed": 14,
+    },
 }
 
 

@@ -1,0 +1,450 @@
+"""The KV-cache memory subsystem: managers, preemption/restore, streamed
+transfer.
+
+Covers the watermark regression (grow must honor the reserve admit keeps),
+monolithic per-request reservation, prefix-cache sharing/eviction
+accounting, KVTransferPlan exposure bounds (overlap=0 == legacy lump sum),
+and end-to-end preemption sweeps (recompute + swap) with request
+conservation.
+"""
+import numpy as np
+import pytest
+
+from repro.api import MemorySpec, SimSpec, SpecError, run
+from repro.core.policies.memory import (
+    KVTransferPlan, MonolithicKVManager, PagedKVManager,
+    PrefixCachingKVManager, resolve_memory,
+)
+from repro.core.request import Request, RState
+
+
+def _req(rid, prompt=256, out=64, prefix_id=None, prefix_len=0):
+    return Request(rid=rid, arrival=0.0, prompt_len=prompt, output_len=out,
+                   prefix_id=prefix_id, prefix_len=prefix_len)
+
+
+# ------------------------------------------------------------- watermark --
+def test_grow_honors_watermark_like_admit():
+    # 100 blocks, watermark 10: admit leaves the reserve, growth must too
+    mgr = PagedKVManager(total_bytes=100 * 160, kv_bytes_per_token=10,
+                         block_tokens=16, watermark=0.10)
+    assert mgr.watermark_blocks == 10
+    assert mgr.admit(0, 80 * 16)          # 80 blocks; 20 free
+    assert mgr.grow(0, 90 * 16)           # 90 blocks; exactly at reserve
+    assert mgr.free_blocks == 10
+    # regression: growth below the watermark must fail (it used to drain
+    # the reserve admit enforces)
+    assert not mgr.grow(0, 91 * 16)
+    assert mgr.free_blocks == 10
+    # the explicit escape hatch (last resort before preempting the only
+    # resident request) may dip into the reserve
+    assert mgr.grow(0, 95 * 16, ignore_watermark=True)
+    assert mgr.free_blocks == 5
+
+
+def test_admit_still_honors_watermark():
+    mgr = PagedKVManager(total_bytes=100 * 160, kv_bytes_per_token=10,
+                         block_tokens=16, watermark=0.10)
+    assert not mgr.admit(0, 95 * 16)
+    assert mgr.admit(0, 90 * 16)
+
+
+# ------------------------------------------------------------ monolithic --
+def test_monolithic_reserves_per_request_bound_not_max_len():
+    mgr = MonolithicKVManager(total_bytes=10_000 * 10,
+                              kv_bytes_per_token=10, max_len=4096,
+                              watermark=0.0)
+    # regression: a 256+64 request must reserve 320 tokens, not max_len
+    r = _req(0, prompt=256, out=64)
+    assert mgr.admit_request(r)
+    assert mgr.held_blocks() == 320
+    # growth inside the reserve is free; the reserve covers every context
+    for ctx in (300, 320):
+        assert mgr.grow(0, ctx)
+        assert mgr.held_blocks() == 320
+    assert mgr.free(0) == 320
+    # a raw admit with no bound falls back to max_len
+    small = MonolithicKVManager(total_bytes=1000 * 10,
+                                kv_bytes_per_token=10, max_len=4096,
+                                watermark=0.0)
+    assert not small.admit(1, 100)        # max_len 4096 > 1000 total
+    assert small.admit(2, 100, max_tokens=200)
+    assert small.held_blocks() == 200
+
+
+# ---------------------------------------------------------- prefix cache --
+def _prefix_mgr(blocks=1000, block_tokens=16, watermark=0.0):
+    return PrefixCachingKVManager(
+        total_bytes=blocks * block_tokens * 10, kv_bytes_per_token=10,
+        block_tokens=block_tokens, watermark=watermark)
+
+
+def _conserved(m):
+    return m.free_blocks + m.held_blocks() + m.cached_blocks() \
+        == m.total_blocks
+
+
+def test_prefix_cache_hit_after_free():
+    m = _prefix_mgr()
+    a = _req(0, prompt=512, out=8, prefix_id=7, prefix_len=256)
+    assert m.admit_request(a)
+    assert a.prefill_progress == 0        # nothing cached yet
+    assert m.prefix_hit(_req(1, prefix_id=7, prefix_len=256)) == 0
+    m.free(0)                             # computed context folds into cache
+    assert m.cached_blocks() == 512 // 16  # radix: the full prompt extent
+    assert _conserved(m)
+    b = _req(1, prompt=512, out=8, prefix_id=7, prefix_len=256)
+    assert m.prefix_hit(b) == 256
+    assert m.admit_request(b)
+    assert b.prefill_progress == 256      # cached prefill skipped
+    assert m.hit_tokens == 256
+    assert m.prefix_hit_rate > 0
+    assert _conserved(m)
+    # the shared blocks are held once: b holds only its unique suffix
+    assert m.held_blocks() == m.blocks_for(512) - 16
+
+
+def test_prefix_hit_capped_one_token_short():
+    """A full-prompt hit must still compute >= 1 token (the first output
+    token comes from the last prompt position)."""
+    m = _prefix_mgr()
+    a = _req(0, prompt=256, out=4, prefix_id=1, prefix_len=256)
+    assert m.admit_request(a)
+    m.free(0)
+    b = _req(1, prompt=256, out=4, prefix_id=1, prefix_len=256)
+    assert m.admit_request(b)
+    assert b.prefill_progress < b.prompt_len
+
+
+def test_prefix_referenced_blocks_survive_pressure_cold_are_evicted():
+    m = _prefix_mgr(blocks=100)
+    a = _req(0, prompt=320, out=8, prefix_id=1, prefix_len=320)  # 20 blocks
+    assert m.admit_request(a)
+    m.free(0)
+    cold = _req(1, prompt=320, out=8, prefix_id=2, prefix_len=320)
+    assert m.admit_request(cold)
+    m.free(1)
+    assert m.cached_blocks() == 40        # 2 full 20-block extents cached
+    hot = _req(2, prompt=320, out=8, prefix_id=1, prefix_len=320)
+    assert m.admit_request(hot)           # references prefix 1
+    # demand more than free: the cold prefix 2 must be evicted LRU, the
+    # referenced prefix 1 must survive
+    big = _req(3, prompt=70 * 16, out=8)
+    assert m.admit_request(big)
+    assert m.evictions >= 1
+    assert m.prefix_hit(_req(4, prefix_id=2, prefix_len=320)) == 0
+    assert m.prefix_hit(_req(5, prefix_id=1, prefix_len=320)) > 0
+    assert _conserved(m)
+
+
+def test_prefix_cache_raw_admit_path_has_no_sharing():
+    m = _prefix_mgr()
+    assert m.admit(0, 256)                # decode-side admit: plain blocks
+    assert m.held_blocks() == m.blocks_for(256)
+    m.free(0)
+    assert m.cached_blocks() == 0
+
+
+# -------------------------------------------------- conservation property --
+def test_block_conservation_under_random_schedules():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.lists(st.tuples(
+        st.sampled_from(["admit", "grow", "free", "preempt_free"]),
+        st.integers(0, 15), st.integers(1, 2048), st.integers(0, 5)),
+        min_size=1, max_size=200))
+    @settings(max_examples=50, deadline=None)
+    def inner(ops):
+        m = _prefix_mgr(blocks=300, watermark=0.05)
+        live = {}
+        for kind, rid, toks, group in ops:
+            if kind == "admit" and rid not in live:
+                r = _req(rid, prompt=toks, out=16, prefix_id=group,
+                         prefix_len=min(toks, 256))
+                if m.admit_request(r):
+                    live[rid] = toks
+            elif kind == "grow" and rid in live:
+                if m.grow(rid, live[rid] + toks):
+                    live[rid] += toks
+            elif kind in ("free", "preempt_free") and rid in live:
+                # a preemption IS a free from the manager's perspective
+                m.free(rid, insert=(kind == "free"))
+                del live[rid]
+            assert 0 <= m.free_blocks <= m.total_blocks
+            assert _conserved(m)
+        for rid in list(live):
+            m.free(rid)
+        assert _conserved(m)
+        assert m.held_blocks() == 0
+
+    inner()
+
+
+# ---------------------------------------------------- PREEMPTED lifecycle --
+def test_preempted_transitions_legal_and_illegal():
+    r = _req(0)
+    r.state = RState.DECODING
+    r.to(RState.PREEMPTED, 1.0)
+    r.to(RState.QUEUED_PREFILL, 1.0)      # recompute restore
+    r2 = _req(1)
+    r2.state = RState.DECODING
+    r2.to(RState.PREEMPTED, 1.0)
+    r2.to(RState.QUEUED_DECODE, 2.0)      # swap-in restore
+    for bad in (RState.COMPLETE, RState.KV_TRANSFER, RState.DECODING,
+                RState.PREFILL_COMPLETE):
+        r3 = _req(2)
+        r3.state = RState.PREEMPTED
+        with pytest.raises(ValueError):
+            r3.to(bad, 0.0)
+    # only memory pressure puts a request into PREEMPTED
+    r4 = _req(3)
+    with pytest.raises(ValueError):
+        r4.to(RState.PREEMPTED, 0.0)
+
+
+def test_begin_recompute_resets_prefill_to_full_context():
+    r = _req(0, prompt=100, out=50)
+    r.generated = 20
+    r.prefill_progress = 100
+    r.state = RState.DECODING
+    r.to(RState.PREEMPTED, 3.0)
+    r.begin_recompute(3.0)
+    assert r.state is RState.QUEUED_PREFILL
+    assert r.prefill_total == 120         # prompt + generated
+    assert r.prefill_progress == 0
+    assert r.restore_pending
+
+
+# --------------------------------------------------------- transfer plan --
+def test_transfer_plan_overlap_zero_is_lump_sum():
+    plan = KVTransferPlan(n_layers=32, bytes_per_layer=1e6,
+                          bandwidth=25e9, latency=5e-6, overlap=0.0)
+    assert plan.exposed_time(compute_window=10.0) == plan.serial_time
+    assert plan.serial_time == 5e-6 + 32e6 / 25e9
+
+
+def test_transfer_plan_exposure_bounds():
+    mk = lambda ov: KVTransferPlan(n_layers=32, bytes_per_layer=1e6,
+                                   bandwidth=25e9, latency=5e-6, overlap=ov)
+    window = 0.01
+    serial = mk(0.0).serial_time
+    prev = serial
+    for ov in (0.25, 0.5, 1.0):
+        t = mk(ov).exposed_time(window)
+        assert t <= prev + 1e-15          # monotone in overlap
+        assert t >= mk(ov).latency + mk(ov).layer_time - 1e-15
+        prev = t
+    # a zero compute window hides nothing
+    assert mk(1.0).exposed_time(0.0) == serial
+    # one layer cannot stream
+    one = KVTransferPlan(n_layers=1, bytes_per_layer=32e6, bandwidth=25e9,
+                         latency=5e-6, overlap=1.0)
+    assert one.exposed_time(10.0) == one.serial_time
+
+
+# -------------------------------------------------------------- resolve --
+def test_resolve_memory_registry():
+    cls, kw = resolve_memory("prefix")
+    assert cls is PrefixCachingKVManager and kw == {}
+    cls, kw = resolve_memory({"name": "paged", "preemption": "swap",
+                              "swap_bw": 1e9})
+    assert cls is PagedKVManager
+    assert kw == {"preemption": "swap", "swap_bw": 1e9}
+    with pytest.raises(KeyError):
+        resolve_memory({"name": "paged", "preemption": "abort"})
+
+
+def test_memory_spec_validation():
+    SimSpec.from_dict({"memory": {"manager": "prefix",
+                                  "transfer_overlap": 0.5}}).validate()
+    with pytest.raises(SpecError):
+        SimSpec.from_dict({"memory": {"preemption": "abort"}}).validate()
+    with pytest.raises(SpecError):
+        SimSpec.from_dict({"memory": {"transfer_overlap": 1.5}}).validate()
+    with pytest.raises(SpecError):
+        SimSpec.from_dict({"memory": {"capacity_frac": 0.0}}).validate()
+    with pytest.raises(SpecError):   # both manager knobs set
+        SimSpec.from_dict({"memory": {"manager": "paged"},
+                           "policy": {"memory": "paged"}}).validate()
+    with pytest.raises(SpecError):   # shared prefix needs a length
+        SimSpec.from_dict({"workload": {"prefix_groups": 4}}).validate()
+    with pytest.raises(SpecError):   # conversation prefixes already share
+        SimSpec.from_dict({"workload": {"turns": 3, "prefix_groups": 2,
+                                        "prefix_len": 64}}).validate()
+    with pytest.raises(SpecError):   # closed-loop re-stamping breaks turns
+        SimSpec.from_dict({"workload": {"turns": 3, "arrival": "closed",
+                                        "concurrency": 4}}).validate()
+
+
+# ------------------------------------------------------------------ e2e --
+_PRESSURE = {
+    "model": {"name": "qwen2-7b", "smoke": True},
+    "topology": {"preset": "pd", "n_prefill": 1, "n_decode": 1},
+    "workload": {"n_requests": 40, "arrival": "burst", "burst_size": 40,
+                 "burst_period": 1.0, "prompt": "fixed", "prompt_mean": 64,
+                 "output": "fixed", "output_mean": 2048, "seed": 7},
+    "seed": 7,
+}
+
+
+@pytest.mark.parametrize("mode", ["recompute", "swap"])
+def test_preemption_sweep_conserves_and_completes(mode):
+    d = dict(_PRESSURE)
+    d["memory"] = {"manager": "paged", "capacity_frac": 0.0002,
+                   "preemption": mode}
+    rep = run(SimSpec.from_dict(d))
+    assert rep.all_complete, rep.conservation
+    assert rep.conservation == {"complete": 40}
+    assert rep.summary["preemptions"] > 0
+    mem = rep.clusters["decode"]["memory"]
+    if mode == "swap":
+        assert mem["swap_outs"] > 0
+        assert mem["swap_outs"] == mem["swap_ins"]
+    # no replica leaked residency and every manager balances its books
+    assert rep.summary["request_preemptions"] >= \
+        rep.summary["preempted_requests"] > 0
+
+
+def test_preemption_with_monolithic_never_triggers():
+    """Monolithic reserves the full bound up front: admission backpressure
+    replaces preemption entirely."""
+    d = dict(_PRESSURE)
+    d["memory"] = {"manager": "monolithic", "capacity_frac": 0.0002}
+    rep = run(SimSpec.from_dict(d))
+    assert rep.all_complete
+    assert rep.summary["preemptions"] == 0
+
+
+def test_streamed_transfer_overlap_zero_matches_legacy_bit_for_bit():
+    legacy = dict(_PRESSURE)
+    legacy["policy"] = {"memory": "paged"}
+    lump = run(SimSpec.from_dict(legacy))
+    d = dict(_PRESSURE)
+    d["memory"] = {"manager": "paged", "transfer_overlap": 0.0}
+    streamed_off = run(SimSpec.from_dict(d))
+    assert streamed_off.summary == lump.summary
+
+
+def test_streamed_transfer_reduces_exposure_and_keeps_conservation():
+    fracs = {}
+    for ov in (0.0, 0.5, 1.0):
+        d = dict(_PRESSURE)
+        d["memory"] = {"manager": "paged", "transfer_overlap": ov}
+        rep = run(SimSpec.from_dict(d))
+        assert rep.all_complete
+        fracs[ov] = rep.summary["kv_transfer_exposed_frac"]
+    assert fracs[0.0] == 1.0
+    assert fracs[1.0] < fracs[0.5] < fracs[0.0]
+
+
+def test_prefix_caching_beats_paged_under_pressure_e2e():
+    base = {
+        "model": {"name": "qwen2-7b", "smoke": True},
+        "topology": {"preset": "pd", "n_prefill": 1, "n_decode": 1},
+        "workload": {"n_requests": 60, "rate": 120.0, "prompt_mean": 512,
+                     "output_mean": 32, "prefix_groups": 4,
+                     "prefix_len": 2048, "seed": 5},
+        "seed": 5,
+    }
+    reports = {}
+    for mgr in ("paged", "prefix"):
+        d = dict(base)
+        d["memory"] = {"manager": mgr, "capacity_frac": 0.001}
+        reports[mgr] = run(SimSpec.from_dict(d))
+        assert reports[mgr].all_complete
+    assert "prefix_hit_token_frac" not in reports["paged"].summary
+    assert reports["prefix"].summary["prefix_hit_token_frac"] > 0.3
+    # skipped prefill compute shows up as fewer prefill tokens and lower
+    # tail TTFT under load
+    tok = lambda rep: sum(r["prefill_tokens"] for r in
+                          rep.clusters["prefill"]["replicas"].values())
+    assert tok(reports["prefix"]) < 0.6 * tok(reports["paged"])
+    assert reports["prefix"].summary["ttft_p99_s"] <= \
+        reports["paged"].summary["ttft_p99_s"]
+
+
+def test_multiturn_workload_hits_prefix_cache():
+    d = {
+        "model": {"name": "qwen2-7b", "smoke": True},
+        "topology": {"preset": "colocated", "n_replicas": 1},
+        "workload": {"n_requests": 24, "rate": 4.0, "prompt_mean": 256,
+                     "output_mean": 32, "turns": 4, "turn_gap": 2.0,
+                     "seed": 9},
+        "memory": {"manager": "prefix"},
+        "seed": 9,
+    }
+    rep = run(SimSpec.from_dict(d))
+    assert rep.all_complete
+    assert rep.summary["prefix_hit_token_frac"] > 0.2
+
+
+def test_never_fitting_request_fails_loudly():
+    """A request whose max context exceeds the whole pool must raise a
+    clear config error at preemption time, not strand itself silently."""
+    d = dict(_PRESSURE)
+    d["workload"] = dict(_PRESSURE["workload"], n_requests=2,
+                         burst_size=2, output_mean=200_000)
+    d["memory"] = {"manager": "paged", "capacity_frac": 0.0002}
+    with pytest.raises(RuntimeError, match="raise memory capacity"):
+        run(SimSpec.from_dict(d))
+
+
+def test_recompute_preempt_folds_only_declared_prefix():
+    """Preempting a grown request must not pin its whole context inside a
+    ref-held shared prefix entry (blocks no consumer could ever hit)."""
+    m = _prefix_mgr(blocks=200)
+    a = _req(0, prompt=320, out=8, prefix_id=1, prefix_len=320)
+    assert m.admit_request(a)
+    m.free(0)                                   # entry: 20 blocks
+    sibling = _req(1, prompt=320, out=8, prefix_id=1, prefix_len=320)
+    assert m.admit_request(sibling)             # pins the entry (refs=1)
+    victim = _req(2, prompt=320, out=8, prefix_id=1, prefix_len=320)
+    assert m.admit_request(victim)
+    assert m.grow(2, 1280)                      # decode grew to 80 blocks
+    m.free(2, insert=True, full_extent=False)   # recompute preemption
+    assert m.cached_blocks() == 20              # fold capped at declared
+    assert _conserved(m)
+
+
+def test_prefix_manager_with_swap_does_not_double_count_kv():
+    """A swap moves the whole KV to host: the device must not also fold it
+    into the prefix cache, or swap-in re-reserves bytes the cache still
+    holds (double residency) and pressure snowballs."""
+    d = dict(_PRESSURE)
+    wl = dict(_PRESSURE["workload"], prefix_groups=4, prefix_len=48)
+    d["workload"] = wl
+    d["memory"] = {"manager": "prefix", "capacity_frac": 0.0002,
+                   "preemption": "swap"}
+    rep = run(SimSpec.from_dict(d))
+    assert rep.all_complete, rep.conservation
+    assert rep.conservation == {"complete": 40}
+
+
+def test_replica_failure_during_swap_pressure_conserves():
+    """A decode replica failing while requests are preempted/swapped must
+    re-route everything (epoch-guarded swap events, freed residency) and
+    still complete the whole workload."""
+    d = dict(_PRESSURE)
+    d["topology"] = {"preset": "pd", "n_prefill": 1, "n_decode": 2}
+    d["memory"] = {"manager": "paged", "capacity_frac": 0.0002,
+                   "preemption": "swap"}
+    d["faults"] = [{"kind": "failure", "cluster": "decode", "replica": 0,
+                    "at": 2.0, "downtime": 5.0}]
+    rep = run(SimSpec.from_dict(d))
+    assert rep.all_complete, rep.conservation
+    assert rep.conservation == {"complete": 40}
+
+
+def test_memory_spec_yaml_round_trip():
+    spec = SimSpec.from_dict({
+        "memory": {"manager": {"name": "prefix", "block_tokens": 32},
+                   "preemption": "swap", "swap_bw": 1e9,
+                   "transfer_overlap": 0.7, "capacity_frac": 0.25},
+        "workload": {"prefix_groups": 8, "prefix_len": 512},
+    })
+    back = SimSpec.from_yaml(spec.to_yaml())
+    assert back.memory == spec.memory
+    assert back.workload.prefix_groups == 8
+    assert back.spec_hash() == spec.spec_hash()
+    assert isinstance(back.memory, MemorySpec)
