@@ -108,6 +108,52 @@ def run_bench(smoke: bool = False) -> Tuple[List[str], dict]:
         f"sim_speedup={rep.sim_duration_s / wall:.1f}x;"
         f"completed={rep.summary['n_completed']}")
 
+    # ---- fleet: the multi-instance control plane at scale -----------------
+    n_fleet = 600 if smoke else 5000
+    n_inst = 8 if smoke else 16
+    rep = run(_spec("fleet-scale", {
+        "model": {"name": "qwen2-7b", "smoke": True},
+        "topology": {"preset": "colocated"},
+        "workload": {"n_requests": n_fleet, "rate": 120.0,
+                     "rate_curve": "diurnal", "rate_period": 30.0,
+                     "rate_amplitude": 0.6, "prompt_mean": 256,
+                     "output_mean": 32, "prefix_groups": 16,
+                     "prefix_len": 256, "seed": 0},
+        "memory": {"manager": "prefix"},
+        "slo": {"ttft_s": 0.5, "tpot_s": 0.05},
+        "fleet": {
+            "instances": [
+                {"name": "colo", "count": n_inst - n_inst // 4},
+                {"name": "pd", "count": n_inst // 4,
+                 "topology": {"preset": "pd", "n_prefill": 1,
+                              "n_decode": 1}},
+            ],
+            "router": "prefix_affinity",
+            "autoscaler": {"min_instances": 2,
+                           "max_instances": n_inst + 4,
+                           "interval_s": 1.0, "up_queue_depth": 8.0,
+                           "down_queue_depth": 1.0},
+        },
+    }))
+    ev, wall = rep.sim_events, rep.wall_clock_s
+    results["fleet"] = {
+        "n_requests": n_fleet, "instances": n_inst, "events": ev,
+        "wall_s": wall, "events_per_s": ev / wall,
+        "sim_speedup": rep.sim_duration_s / wall,
+        "completed": rep.summary["n_completed"],
+        "scale_up_events": rep.summary["scale_up_events"],
+        "scale_down_events": rep.summary["scale_down_events"],
+        "prefix_hit_token_frac":
+            rep.summary.get("prefix_hit_token_frac"),
+        "routing_imbalance": rep.summary.get("routing_imbalance"),
+    }
+    lines.append(
+        f"fleet_{n_inst}inst_{n_fleet}req,{wall * 1e6 / max(ev, 1):.2f},"
+        f"events={ev};events_per_s={ev / wall:,.0f};"
+        f"completed={rep.summary['n_completed']};"
+        f"scale_events={rep.summary['scale_up_events']}"
+        f"+{rep.summary['scale_down_events']}")
+
     # ---- Table-1 feature matrix -------------------------------------------
     n_cell = 20 if smoke else 100
     for name, body in _cells(n_cell).items():
@@ -131,6 +177,23 @@ def run_bench(smoke: bool = False) -> Tuple[List[str], dict]:
     return lines, results
 
 
+def append_trajectory(path: str, label: str, results: dict) -> None:
+    """Append one labeled result set to a trajectory file (the repo-root
+    ``BENCH_sim_scale.json``), so events/s regressions across PRs are a
+    one-file diff."""
+    import os
+    traj = {"trajectory": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            traj = json.load(f)
+    traj["trajectory"] = [e for e in traj.get("trajectory", [])
+                          if e.get("label") != label] + \
+        [{"label": label, **results}]
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -138,6 +201,11 @@ if __name__ == "__main__":
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write machine-readable results (events/s, wall "
                          "time, per-cell status) to PATH")
+    ap.add_argument("--trajectory", metavar="PATH", default=None,
+                    help="append results to a cross-PR trajectory file "
+                         "(e.g. the repo-root BENCH_sim_scale.json)")
+    ap.add_argument("--label", default="dev",
+                    help="trajectory entry label (e.g. PR5)")
     args = ap.parse_args()
     out_lines, out_results = run_bench(smoke=args.smoke)
     for l in out_lines:
@@ -147,3 +215,6 @@ if __name__ == "__main__":
             json.dump(out_results, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {args.json}")
+    if args.trajectory:
+        append_trajectory(args.trajectory, args.label, out_results)
+        print(f"appended '{args.label}' -> {args.trajectory}")

@@ -26,6 +26,11 @@ SUMMARY_KEYS = (
     "tpot_p50_s", "tpot_p99_s", "e2e_p50_s", "e2e_p99_s",
     "queue_p50_s", "queue_p99_s", "goodput_tok_s", "slo_attainment",
     "bubble_time_s", "overlap_efficiency",
+    # fleet control plane
+    "fleet_instances_built", "fleet_instances_active_end",
+    "scale_up_events", "scale_down_events", "rebalance_events",
+    "routing_imbalance", "provisioned_gpu_seconds", "idle_gpu_seconds",
+    "prefix_hit_token_frac", "tenant_slo_attainment_min",
 )
 
 
@@ -140,13 +145,17 @@ def _cmd_list(args: argparse.Namespace) -> int:
     from repro.core.policies.memory import MEMORY
     from repro.core.policies.scheduling import SCHEDULERS
     from repro.core.routing import ROUTERS
+    from repro.fleet.router import FLEET_ROUTERS
     from repro.api.spec import ARRIVALS, PRESETS
+    from repro.workload.generator import RATE_CURVES
     sections = {
         "models": sorted(REGISTRY),
         "hardware": sorted(HARDWARE),
         "topology presets": list(PRESETS) + ["(or inline clusters/links)"],
         "arrival processes": list(ARRIVALS),
+        "rate curves": list(RATE_CURVES),
         "routers": sorted(ROUTERS),
+        "fleet routers": sorted(FLEET_ROUTERS),
         "batching policies": sorted(BATCHING),
         "queue policies": sorted(SCHEDULERS),
         "memory managers": sorted(MEMORY),

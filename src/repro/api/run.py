@@ -26,8 +26,36 @@ from repro.core.workflows.colocated import build_colocated
 from repro.core.workflows.pd_disagg import build_pd
 
 
+class ReportBase:
+    """Shared serialization surface of Report and FleetReport: summary
+    item access, dict/JSON round-trip, and file save — one implementation
+    so the two report types cannot drift apart."""
+
+    def __getitem__(self, key: str) -> float:
+        return self.summary[key]
+
+    def get(self, key: str, default: Any = None) -> Any:
+        return self.summary.get(key, default)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]):
+        return cls(**dict(d))
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True,
+                          default=float)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=2))
+            f.write("\n")
+
+
 @dataclass
-class Report:
+class Report(ReportBase):
     """Typed result of one simulation run (JSON-serializable)."""
     name: str
     spec: Dict[str, Any]
@@ -43,38 +71,24 @@ class Report:
     created_at: str
     point: Optional[Dict[str, Any]] = None   # sweep-axis assignment
 
-    def __getitem__(self, key: str) -> float:
-        return self.summary[key]
-
-    def get(self, key: str, default: Any = None) -> Any:
-        return self.summary.get(key, default)
-
-    def to_dict(self) -> Dict[str, Any]:
-        return asdict(self)
-
-    @classmethod
-    def from_dict(cls, d: Mapping[str, Any]) -> "Report":
-        return cls(**dict(d))
-
-    def to_json(self, indent: Optional[int] = None) -> str:
-        return json.dumps(self.to_dict(), indent=indent, sort_keys=True,
-                          default=float)
-
-    def save(self, path: str) -> None:
-        with open(path, "w") as f:
-            f.write(self.to_json(indent=2))
-            f.write("\n")
-
 
 # ----------------------------------------------------------------- build --
 def build(spec: SimSpec, *,
           hardware: Optional[HardwareSpec] = None,
-          ops=None) -> SystemHandle:
+          ops=None,
+          engine=None) -> SystemHandle:
     """Compile a validated SimSpec into a runnable SystemHandle.
 
     ``hardware``/``ops`` inject measured/calibrated objects (the
     benchmark-calibration flow); by default both come from the spec.
+    ``engine`` injects a shared SimEngine — how the fleet layer builds
+    many instances into ONE deterministic event timeline.
     """
+    if spec.fleet is not None:
+        raise SpecError(
+            "spec.fleet: build() compiles ONE deployment — fleet specs go "
+            "through run() (repro.fleet.run_fleet), which builds each "
+            "instance from a fleet-stripped sub-spec")
     spec.validate()
     cfg = get_config(spec.model.name, smoke=spec.model.smoke)
     topo = spec.topology
@@ -86,6 +100,7 @@ def build(spec: SimSpec, *,
     pipeline = spec.pipeline.to_config() if spec.pipeline is not None \
         else None
     common = dict(ops=ops, routing=pol.router, seed=spec.seed,
+                  engine=engine,
                   memory=pol.memory, queue_policy=pol.scheduler,
                   memoize=topo.memoize, pipeline=pipeline)
     if spec.memory is not None:
@@ -226,7 +241,15 @@ def run(spec: SimSpec, *,
     Same spec + same seed is bit-deterministic: the event engine orders
     simultaneous events by schedule sequence and every RNG is seeded from
     ``spec.seed``.
+
+    A spec with a ``fleet`` section dispatches to the fleet control plane
+    and returns a :class:`repro.fleet.FleetReport` (same surface:
+    ``summary`` / ``spec_hash`` / ``save`` / item access).
     """
+    if spec.fleet is not None:
+        from repro.fleet import run_fleet
+        return run_fleet(spec, hardware=hardware, ops=ops,
+                         engine_overhead=engine_overhead)
     t0 = time.perf_counter()
     handle = build(spec, hardware=hardware, ops=ops)
     if engine_overhead is not None:

@@ -39,7 +39,7 @@ from repro.core.policies.memory import PREEMPTION_MODES, resolve_memory
 from repro.core.policies.scheduling import resolve_scheduler
 from repro.core.routing import resolve_router
 from repro.core.topology import ClusterSpec, ROLES, StageGraph
-from repro.workload.generator import ARRIVALS
+from repro.workload.generator import ARRIVALS, RATE_CURVES
 
 PRESETS = ("colocated", "pd", "af")
 LENGTH_KINDS = ("fixed", "uniform", "lognormal", "bimodal")
@@ -307,11 +307,15 @@ class WorkloadSpec:
     prefix_len: int = 0            # shared tokens per group
     turns: int = 1                 # multi-turn conversations (growing prefix)
     turn_gap: float = 5.0          # seconds between a conversation's turns
+    rate_curve: Optional[str] = None   # "diurnal": sinusoidal rate swing
+    rate_period: float = 60.0      # seconds per diurnal cycle
+    rate_amplitude: float = 0.5    # relative swing, in [0, 1)
     trace: Optional[str] = None    # JSONL replay path (overrides generator)
     seed: Optional[int] = None     # None -> SimSpec.seed
 
     def __post_init__(self) -> None:
-        _coerce(self, float, "rate", "burst_period", "turn_gap")
+        _coerce(self, float, "rate", "burst_period", "turn_gap",
+                "rate_period", "rate_amplitude")
         _coerce(self, int, "n_requests", "prompt_mean", "prompt_max",
                 "output_mean", "output_max", "burst_size", "concurrency",
                 "prefix_groups", "prefix_len", "turns", "seed")
@@ -349,6 +353,21 @@ class WorkloadSpec:
             raise SpecError("workload: turns > 1 and prefix_groups > 0 are "
                             "mutually exclusive (conversation prefixes "
                             "already share)")
+        if self.rate_curve is not None:
+            if self.rate_curve not in RATE_CURVES:
+                raise SpecError(f"workload.rate_curve: unknown curve "
+                                f"{self.rate_curve!r}; available: "
+                                f"{RATE_CURVES}")
+            if self.arrival != "poisson":
+                raise SpecError("workload.rate_curve: rate curves modulate "
+                                "the poisson arrival process; got "
+                                f"arrival={self.arrival!r}")
+            if not 0.0 <= self.rate_amplitude < 1.0:
+                raise SpecError(f"workload.rate_amplitude: must be in "
+                                f"[0, 1), got {self.rate_amplitude}")
+            if self.rate_period <= 0:
+                raise SpecError(f"workload.rate_period: must be > 0, "
+                                f"got {self.rate_period}")
         if self.turns > 1 and self.arrival == "closed":
             raise SpecError(
                 "workload.arrival: closed-loop injection re-stamps arrivals "
@@ -370,6 +389,8 @@ class WorkloadSpec:
             burst_period=self.burst_period, concurrency=self.concurrency,
             prefix_groups=self.prefix_groups, prefix_len=self.prefix_len,
             turns=self.turns, turn_gap=self.turn_gap,
+            rate_curve=self.rate_curve, rate_period=self.rate_period,
+            rate_amplitude=self.rate_amplitude,
             seed=self.seed if self.seed is not None else default_seed))
 
 
@@ -578,6 +599,8 @@ class FaultSpec:
     at: float = 0.0                # failure: injection time (s)
     downtime: float = 10.0         # failure: recovery delay (s)
     slowdown: float = 1.0          # straggler: step-time multiplier
+    instance: Optional[str] = None  # fleet runs: target instance (default:
+    #                                 the first instance of the fleet)
 
     def __post_init__(self) -> None:
         _coerce(self, float, "at", "downtime", "slowdown")
@@ -598,6 +621,207 @@ class FaultSpec:
                             f"got {self.slowdown}")
 
 
+# ---------------------------------------------------------------- fleet ----
+@dataclass
+class InstanceSpec:
+    """A group of identical serving instances inside a fleet.
+
+    Each of the ``count`` instances is a FULL deployment (its own
+    GlobalController, clusters, replicas, KV managers) built from
+    ``topology`` — or the SimSpec's top-level topology when None — so a
+    fleet mixes heterogeneous instance shapes freely (a PD pool next to
+    colocated pools on different hardware).  ``pipeline``/``memory``
+    override the spec-level sections for this group only.
+    """
+    name: str = "inst"
+    count: int = 1
+    topology: Optional[TopologySpec] = None
+    pipeline: Optional[PipelineSpec] = None
+    memory: Optional[MemorySpec] = None
+
+    def __post_init__(self) -> None:
+        _coerce(self, int, "count")
+
+
+@dataclass
+class TenantSpec:
+    """One tenant class: traffic share, per-class SLOs, and priority.
+
+    ``weight`` is the relative share of arrivals assigned to this class;
+    ``priority`` (lower = more urgent) lands in the request's
+    ``timestamps['priority']`` slot, so ``policy.scheduler: priority``
+    makes tenant priority effective inside every instance.
+    """
+    name: str = "default"
+    weight: float = 1.0
+    ttft_s: Optional[float] = None     # per-class SLOs; None -> spec.slo
+    tpot_s: Optional[float] = None
+    priority: int = 0
+
+    def __post_init__(self) -> None:
+        _coerce(self, float, "weight", "ttft_s", "tpot_s")
+        _coerce(self, int, "priority")
+
+
+@dataclass
+class AutoscalerSpec:
+    """SLO-driven fleet autoscaling (see ``repro.fleet.autoscaler``).
+
+    Every ``interval_s`` the autoscaler compares mean outstanding requests
+    per active instance against ``up_queue_depth`` / ``down_queue_depth``
+    and — when the spec carries an SLO — recent TTFT-SLO attainment against
+    ``slo_attainment_floor``.  Scale-up provisions a clone of ``template``
+    (an InstanceSpec name; default: the first group) with a modeled cold
+    start: per-device weight bytes loaded over ``provision_bw`` plus
+    ``startup_base_s``.  Scale-down drains: the victim stops receiving
+    traffic, finishes its residents, then releases its GPUs.
+    ``pd_rebalance`` additionally shifts replicas between the prefill and
+    decode pools of disaggregated instances (via pre-provisioned standby
+    replicas, ``pd_spares`` per pool) when one pool's queue pressure
+    exceeds ``rebalance_ratio`` times the other's.
+    """
+    interval_s: float = 5.0
+    min_instances: int = 1
+    max_instances: int = 8
+    up_queue_depth: float = 8.0
+    down_queue_depth: float = 1.0
+    slo_attainment_floor: Optional[float] = None
+    cooldown_s: float = 10.0
+    provision_bw: float = 16e9        # weight-load bandwidth (B/s/device)
+    startup_base_s: float = 2.0       # container/runtime bring-up floor
+    template: Optional[str] = None    # InstanceSpec name cloned on scale-up
+    pd_rebalance: bool = False
+    pd_spares: int = 1                # standby replicas per P/D pool
+    rebalance_ratio: float = 4.0
+    reconfigure_s: float = 1.0        # pool-move weight-load time
+
+    def __post_init__(self) -> None:
+        _coerce(self, float, "interval_s", "up_queue_depth",
+                "down_queue_depth", "slo_attainment_floor", "cooldown_s",
+                "provision_bw", "startup_base_s", "rebalance_ratio",
+                "reconfigure_s")
+        _coerce(self, int, "min_instances", "max_instances", "pd_spares")
+
+
+@dataclass
+class FleetSpec:
+    """A multi-instance serving fleet behind one global router.
+
+    ``instances`` lists heterogeneous instance groups; ``router`` names a
+    registered fleet routing policy (``repro.fleet.FLEET_ROUTERS``:
+    round_robin | least_outstanding | power_of_two | prefix_affinity,
+    optionally ``{"name": ..., **kwargs}``); ``autoscaler`` enables
+    SLO-driven scaling; ``tenants`` declares tenant classes with per-class
+    SLOs/priorities (requests are assigned by weighted draw).
+    """
+    instances: List[InstanceSpec] = field(default_factory=list)
+    router: Union[str, Dict[str, Any]] = "least_outstanding"
+    autoscaler: Optional[AutoscalerSpec] = None
+    tenants: List[TenantSpec] = field(default_factory=list)
+
+    # ----------------------------------------------------------- parsing --
+    @classmethod
+    def parse(cls, data: Any, path: str = "fleet") -> Optional["FleetSpec"]:
+        if data is None or isinstance(data, cls):
+            return data
+        if not isinstance(data, Mapping):
+            raise SpecError(f"{path}: expected a mapping for FleetSpec, "
+                            f"got {type(data).__name__}")
+        d = dict(data)
+        instances = []
+        for i, inst in enumerate(d.get("instances") or []):
+            ipath = f"{path}.instances[{i}]"
+            inst = _from_mapping(InstanceSpec, inst, ipath)
+            if isinstance(inst.topology, Mapping):
+                inst.topology = _from_mapping(TopologySpec, inst.topology,
+                                              f"{ipath}.topology")
+            if isinstance(inst.pipeline, str):
+                inst.pipeline = PipelineSpec(preset=inst.pipeline)
+            elif isinstance(inst.pipeline, Mapping):
+                inst.pipeline = _from_mapping(PipelineSpec, inst.pipeline,
+                                              f"{ipath}.pipeline")
+            if isinstance(inst.memory, str):
+                inst.memory = MemorySpec(manager=inst.memory)
+            elif isinstance(inst.memory, Mapping):
+                inst.memory = _from_mapping(MemorySpec, inst.memory,
+                                            f"{ipath}.memory")
+            instances.append(inst)
+        d["instances"] = instances
+        d["autoscaler"] = _from_mapping(AutoscalerSpec, d.get("autoscaler"),
+                                        f"{path}.autoscaler")
+        d["tenants"] = [_from_mapping(TenantSpec, t, f"{path}.tenants[{i}]")
+                        for i, t in enumerate(d.get("tenants") or [])]
+        return _from_mapping(cls, d, path)
+
+    # -------------------------------------------------------------- views --
+    def instance_by_name(self, name: Optional[str]) -> InstanceSpec:
+        if name is None:
+            return self.instances[0]
+        for inst in self.instances:
+            if inst.name == name:
+                return inst
+        raise SpecError(f"fleet: unknown instance group {name!r}; "
+                        f"groups: {[i.name for i in self.instances]}")
+
+    def total_instances(self) -> int:
+        return sum(i.count for i in self.instances)
+
+    # --------------------------------------------------------- validation --
+    def validate(self, default_topology: TopologySpec) -> None:
+        from repro.fleet.router import resolve_fleet_router
+        if not self.instances:
+            raise SpecError("fleet.instances: a fleet needs at least one "
+                            "instance group")
+        names = [i.name for i in self.instances]
+        if len(set(names)) != len(names):
+            raise SpecError(f"fleet.instances: duplicate group names "
+                            f"{names}")
+        for i, inst in enumerate(self.instances):
+            if inst.count < 1:
+                raise SpecError(f"fleet.instances[{i}].count: must be >= 1, "
+                                f"got {inst.count}")
+            (inst.topology or default_topology).validate()
+            if inst.pipeline is not None:
+                inst.pipeline.validate()
+            if inst.memory is not None:
+                inst.memory.validate()
+        try:
+            resolve_fleet_router(self.router)
+        except (KeyError, TypeError) as e:
+            raise SpecError(f"fleet.router: {e}") from e
+        if self.autoscaler is not None:
+            a = self.autoscaler
+            if a.min_instances < 1 or a.max_instances < a.min_instances:
+                raise SpecError(
+                    f"fleet.autoscaler: need 1 <= min_instances <= "
+                    f"max_instances, got ({a.min_instances}, "
+                    f"{a.max_instances})")
+            if a.interval_s <= 0 or a.cooldown_s < 0:
+                raise SpecError("fleet.autoscaler: interval_s must be > 0 "
+                                "and cooldown_s >= 0")
+            if a.provision_bw <= 0:
+                raise SpecError(f"fleet.autoscaler.provision_bw: must be "
+                                f"> 0, got {a.provision_bw}")
+            if a.slo_attainment_floor is not None \
+                    and not 0.0 < a.slo_attainment_floor <= 1.0:
+                raise SpecError(f"fleet.autoscaler.slo_attainment_floor: "
+                                f"must be in (0, 1], got "
+                                f"{a.slo_attainment_floor}")
+            if a.pd_spares < 0 or a.rebalance_ratio <= 1.0:
+                raise SpecError("fleet.autoscaler: pd_spares must be >= 0 "
+                                "and rebalance_ratio > 1")
+            if a.template is not None:
+                self.instance_by_name(a.template)
+        tnames = [t.name for t in self.tenants]
+        if len(set(tnames)) != len(tnames):
+            raise SpecError(f"fleet.tenants: duplicate tenant names "
+                            f"{tnames}")
+        for i, t in enumerate(self.tenants):
+            if t.weight <= 0:
+                raise SpecError(f"fleet.tenants[{i}].weight: must be > 0, "
+                                f"got {t.weight}")
+
+
 # -------------------------------------------------------------- SimSpec ----
 @dataclass
 class SimSpec:
@@ -611,6 +835,7 @@ class SimSpec:
     memory: Optional[MemorySpec] = None
     slo: Optional[SLOSpec] = None
     faults: List[FaultSpec] = field(default_factory=list)
+    fleet: Optional[FleetSpec] = None
     seed: int = 0
     until: Optional[float] = None   # sim horizon (s); None -> completion
     name: str = ""
@@ -637,7 +862,30 @@ class SimSpec:
                     "manager-only knob)")
         if self.slo is not None:
             self.slo.validate()
+        if self.fleet is not None:
+            self.fleet.validate(self.topology)
+            if self.workload.arrival == "closed":
+                raise SpecError(
+                    "workload.arrival: closed-loop injection is per-"
+                    "instance; fleet runs route open-loop arrivals through "
+                    "the global router — use poisson/uniform/burst")
+            if self.workload.turns > 1:
+                raise SpecError(
+                    "workload.turns: multi-turn conversations pin a growing "
+                    "prefix to one instance's cache; fleet routing of "
+                    "conversation turns is not modeled yet — use "
+                    "prefix_groups for shared-prefix fleet workloads")
         names = self.topology.cluster_names()
+        if self.fleet is not None:
+            # the policy section is shared by EVERY instance, so a
+            # cluster-keyed batching key must exist in every group's
+            # topology (roles always resolve) — the intersection, not the
+            # union, or one group's build would reject the key mid-run
+            shared = None
+            for inst in self.fleet.instances:
+                cn = set((inst.topology or self.topology).cluster_names())
+                shared = cn if shared is None else shared & cn
+            names = sorted(shared or set())
         if self.policy._role_keyed():
             # role-keyed batching: a misspelled key would silently fall
             # back to the default policy, so reject unknown keys here
@@ -650,7 +898,19 @@ class SimSpec:
                     f"roles: {sorted(ROLES)}, clusters: {names} (or give "
                     f"one policy for all clusters as {{'name': ...}})")
         for i, f in enumerate(self.faults):
-            f.validate(names, f"faults[{i}]")
+            if self.fleet is not None:
+                # the fault lands on ONE instance group (named, or the
+                # first) — validate the cluster against THAT group's
+                # topology, not the union, so a group/cluster mismatch
+                # fails here and not mid-build
+                group = self.fleet.instance_by_name(f.instance)
+                f.validate((group.topology or self.topology)
+                           .cluster_names(), f"faults[{i}]")
+            else:
+                if f.instance is not None:
+                    raise SpecError(f"faults[{i}].instance: only fleet "
+                                    f"specs have named instances")
+                f.validate(names, f"faults[{i}]")
         if self.until is not None and self.until <= 0:
             raise SpecError(f"until: must be > 0 seconds, got {self.until}")
         return self
@@ -691,6 +951,7 @@ class SimSpec:
             slo=_from_mapping(SLOSpec, d.get("slo"), "slo"),
             faults=[_from_mapping(FaultSpec, f, f"faults[{i}]")
                     for i, f in enumerate(d.get("faults") or [])],
+            fleet=FleetSpec.parse(d.get("fleet")),
             seed=int(d.get("seed", 0)),
             until=d.get("until"),
             name=d.get("name", ""))
@@ -752,7 +1013,7 @@ def set_path(d: Dict[str, Any], path: str, value: Any) -> None:
     parts = path.split(".")
     if len(parts) == 1 and parts[0] not in d:
         for section in ("topology", "workload", "policy", "pipeline",
-                        "memory"):
+                        "memory", "fleet"):
             sub = d.get(section)
             if isinstance(sub, Mapping) and parts[0] in sub:
                 parts = [section, parts[0]]

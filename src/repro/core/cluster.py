@@ -51,6 +51,10 @@ class ReplicaWorker:
         self.queue_policy = queue_policy or FCFS()
         self.pipeline = pipeline          # PipelineConfig (latency hiding)
         self.slowdown = slowdown          # straggler factor (1.0 = healthy)
+        # routing eligibility: an inactive replica takes no NEW work but
+        # finishes what it holds (fleet drain / P:D-rebalance standby pools);
+        # distinct from `failed`, which loses in-flight work
+        self.active = True
         self.waiting: List[Request] = []
         self.running: List[Request] = []  # decoding requests resident here
         self.swapped: List[Request] = []  # preempted, KV on host, awaiting room
@@ -330,7 +334,7 @@ class ClusterWorker:
 
     # -- ClusterScheduler duties -------------------------------------------
     def route(self, r: Request) -> ReplicaWorker:
-        healthy = [w for w in self.replicas if not w.failed]
+        healthy = [w for w in self.replicas if not w.failed and w.active]
         if not healthy:
             raise RuntimeError(f"cluster {self.name}: no healthy replicas")
         w = min(healthy, key=lambda w: (w.load(), w.name))
@@ -340,7 +344,7 @@ class ClusterWorker:
         """For pull-based KV transfer: who can host this request's KV?"""
         best, best_load = None, None
         for w in self.replicas:
-            if w.failed or w.memory is None:
+            if w.failed or not w.active or w.memory is None:
                 continue
             if w.memory.can_admit(r.context_len,
                                   max_tokens=r.prompt_len + r.output_len):
@@ -348,6 +352,13 @@ class ClusterWorker:
                 if best is None or l < best_load:
                     best, best_load = w, l
         return best
+
+    def active_replicas(self) -> List[ReplicaWorker]:
+        return [w for w in self.replicas if w.active and not w.failed]
+
+    def queue_depth(self) -> int:
+        """Outstanding work resident in this pool (waiting + running)."""
+        return sum(len(w.waiting) + len(w.running) for w in self.replicas)
 
     def utilization(self, now: float) -> float:
         if not self.replicas or now <= 0:

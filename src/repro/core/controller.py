@@ -13,7 +13,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.cluster import ClusterWorker, Hooks, ReplicaWorker
 from repro.core.engine import SimEngine
@@ -58,6 +58,13 @@ class GlobalController:
         self.requests: Dict[int, Request] = {}
         self._transfers_in_flight = 0
         self._closed_queue: Deque[Request] = deque()  # closed-loop backlog
+        # instance-ification hooks: a fleet control plane treats this
+        # controller as ONE serving instance among many.  ``observer`` is
+        # called on every request completion (drain tracking / fleet
+        # metrics); ``completed_count`` backs the outstanding() load signal
+        # global routers read.
+        self.observer: Optional[Callable[[Request, ReplicaWorker], None]] = None
+        self.completed_count = 0
 
     # ------------------------------------------------------------- wiring --
     def hooks(self) -> Hooks:
@@ -231,8 +238,37 @@ class GlobalController:
     # ------------------------------------------------------------- endings --
     def on_request_complete(self, r: Request, replica: ReplicaWorker) -> None:
         self.metrics.on_complete(r, replica)
+        self.completed_count += 1
+        if self.observer is not None:
+            self.observer(r, replica)
         if self._closed_queue:      # closed loop: a slot just freed
             self._submit_one(self._closed_queue.popleft(), at=self.engine.now)
+
+    # --------------------------------------------------- instance surface --
+    def outstanding(self) -> int:
+        """Requests submitted to this instance and not yet complete — the
+        load signal global (fleet-level) routers balance on."""
+        return len(self.requests) - self.completed_count
+
+    def pool_depths(self) -> Dict[str, int]:
+        """Per-role outstanding work (P:D pressure signal for rebalancing)."""
+        depths: Dict[str, int] = {}
+        for c in self.clusters.values():
+            depths[c.role] = depths.get(c.role, 0) + c.queue_depth()
+        return depths
+
+    def prefix_probe(self, r: Request) -> int:
+        """Best cached-prefix hit (tokens) any entry replica would give this
+        request right now — the affinity signal for cache-aware routing."""
+        best = 0
+        for cluster in self._entry_clusters():
+            for w in cluster.replicas:
+                # inactive replicas' caches are unreachable for new work
+                # (drained donor / standby pools) — never advertise them
+                if w.failed or not w.active or w.memory is None:
+                    continue
+                best = max(best, w.memory.prefix_hit(r))
+        return best
 
     # ------------------------------------------------------------ failures --
     def inject_failure(self, cluster_name: str, replica_idx: int,

@@ -42,6 +42,10 @@ class EV(enum.Enum):
     EXPERT_DISPATCH_DONE = "expert_dispatch_done"
     EXPERT_RANK_DONE = "expert_rank_done"
     EXPERT_COMBINE_DONE = "expert_combine_done"
+    # fleet control plane (multi-instance serving)
+    AUTOSCALE_TICK = "autoscale_tick"
+    INSTANCE_READY = "instance_ready"          # cold start finished
+    POOL_RECONFIGURED = "pool_reconfigured"    # P:D rebalance weight load
 
 
 _seq = itertools.count()

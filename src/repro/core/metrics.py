@@ -74,11 +74,49 @@ class MetricsCollector:
         }
         if slo_ttft is not None and slo_tpot is not None and self.completed:
             good = [r for r in self.completed
-                    if (r.ttft() or 9e9) <= slo_ttft
-                    and (r.tpot() or 9e9) <= slo_tpot]
+                    if _meets_slo(r, slo_ttft, slo_tpot)]
             rep["goodput_tok_s"] = sum(r.generated for r in good) / dur
             rep["slo_attainment"] = len(good) / len(self.completed)
         return rep
+
+    # --------------------------------------------------------- fleet views --
+    @classmethod
+    def merged(cls, collectors: Sequence["MetricsCollector"]
+               ) -> "MetricsCollector":
+        """Fleet-wide view over per-instance collectors: one measurement
+        window anchored at the earliest instance start, all completions and
+        token events pooled (each request completes on exactly one
+        instance, so pooling never double-counts)."""
+        out = cls()
+        starts = [c.start for c in collectors if c.start is not None]
+        out.start = min(starts) if starts else None
+        out.end = max((c.end for c in collectors), default=0.0)
+        for c in collectors:
+            out.completed.extend(c.completed)
+            out.token_times.extend(c.token_times)
+        return out
+
+
+def _meets_slo(r: Request, ttft_s: Optional[float],
+               tpot_s: Optional[float]) -> bool:
+    """One SLO predicate for goodput and attainment (a request with no
+    measured TTFT/TPOT never meets a bound)."""
+    if ttft_s is not None and (r.ttft() or 9e9) > ttft_s:
+        return False
+    if tpot_s is not None and (r.tpot() or 9e9) > tpot_s:
+        return False
+    return True
+
+
+def slo_attainment(requests: Sequence[Request],
+                   ttft_s: Optional[float] = None,
+                   tpot_s: Optional[float] = None) -> Optional[float]:
+    """Fraction of ``requests`` meeting the given SLO bounds (None bound =
+    don't check it); None when there are no requests or no bounds."""
+    if not requests or (ttft_s is None and tpot_s is None):
+        return None
+    return sum(1 for r in requests
+               if _meets_slo(r, ttft_s, tpot_s)) / len(requests)
 
 
 def pareto_frontier(points: Sequence[Tuple[float, float]]) -> List[Tuple[float, float]]:

@@ -46,6 +46,9 @@ class Request:
     # same prefix_id share their first prefix_len prompt tokens
     prefix_id: Optional[int] = None
     prefix_len: int = 0
+    # fleet tenancy: the tenant class this request belongs to (set by the
+    # fleet control plane at submission; None for single-instance runs)
+    tenant: Optional[str] = None
     # preemption/restore bookkeeping
     prefill_len: Optional[int] = None  # recompute target; None -> prompt_len
     restore_pending: bool = False      # next prefill completion is a restore

@@ -397,6 +397,7 @@ def build_af(cfg: ModelConfig, hw: HardwareSpec, *,
              ffn_par: Optional[ParallelismConfig] = None,
              prefill_par: Optional[ParallelismConfig] = None,
              ops: Optional[OperatorModelSet] = None,
+             engine=None,
              routing=None, seed: int = 0,
              expert_cluster_hw: Optional[HardwareSpec] = None,
              remote_expert_ranks: Sequence[int] = (),
@@ -433,6 +434,7 @@ def build_af(cfg: ModelConfig, hw: HardwareSpec, *,
                     expert_link=expert_link, memoize=memoize),
     ])
     return build_system(cfg, hw, graph, ops=ops, routing=routing,
+                        engine=engine,
                         memory=memory, queue_policy=queue_policy, seed=seed,
                         pipeline=pipeline, transfer_overlap=transfer_overlap,
                         kv_frac=kv_frac)

@@ -26,6 +26,7 @@ def build_pd(cfg: ModelConfig, hw: HardwareSpec, *,
              decode_policy: Optional[BatchingPolicy] = None,
              ops: Optional[OperatorModelSet] = None,
              transfer_bw: Optional[float] = None,
+             engine=None,
              routing=None, seed: int = 0,
              memory=None, queue_policy=None,
              memoize: bool = True,
@@ -48,6 +49,7 @@ def build_pd(cfg: ModelConfig, hw: HardwareSpec, *,
                     policy=decode_policy, seed_offset=100, memoize=memoize),
     ])
     return build_system(cfg, hw, graph, ops=ops, routing=routing,
+                        engine=engine,
                         transfer_bw=transfer_bw, memory=memory,
                         queue_policy=queue_policy, seed=seed,
                         pipeline=pipeline, transfer_overlap=transfer_overlap,

@@ -1,0 +1,268 @@
+"""FleetController: the control plane over N serving instances.
+
+Owns the shared SimEngine's fleet-level events: request arrivals (tenant
+assignment + global routing), instance lifecycle (cold-started scale-up,
+drain-then-release scale-down, P:D pool rebalancing), and the autoscaler
+tick loop.  Every instance is a full single-deployment build
+(:mod:`repro.fleet.instance`); the controller only ever talks to the
+instance surface (``outstanding`` / ``prefix_probe`` / ``accept``), never
+to replicas directly — intra-instance scheduling stays the
+GlobalController's job.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.engine import SimEngine
+from repro.core.events import EV
+from repro.fleet.instance import (
+    ACTIVE, DRAINING, STARTING, Instance, instance_subspec,
+)
+from repro.fleet.router import resolve_fleet_router
+
+
+class FleetController:
+    def __init__(self, spec, engine: SimEngine, *,
+                 hardware=None, ops=None, engine_overhead=None):
+        from repro.fleet.autoscaler import Autoscaler
+        self.spec = spec
+        self.fleet = spec.fleet
+        self.engine = engine
+        self._hardware = hardware
+        self._ops = ops
+        self._engine_overhead = engine_overhead
+        self.rng = np.random.default_rng([spec.seed, 0xF1EE7])
+        self.router = resolve_fleet_router(self.fleet.router)
+        self.instances: Dict[str, Instance] = {}
+        self._built = 0                   # lifetime instance counter (seeds)
+        self.scale_events: List[dict] = []
+        self.recent_completed: List = []  # completions since last tick
+        self.peak_devices = 0
+        self.total_requests = 0
+        self.last_arrival = 0.0
+        self._moves_in_flight = 0         # pending P:D reconfigurations
+        # tenant classes: weighted assignment, priorities via timestamps
+        self.tenants = list(self.fleet.tenants)
+        w = np.array([t.weight for t in self.tenants], float)
+        self._tenant_p = w / w.sum() if len(w) else None
+        self.autoscaler = (Autoscaler(self.fleet.autoscaler, self)
+                           if self.fleet.autoscaler is not None else None)
+        for group in self.fleet.instances:
+            for _ in range(group.count):
+                self._build_instance(group, state=ACTIVE)
+        self._track_peak()
+        self._apply_faults()
+
+    # ------------------------------------------------------------ building --
+    def _build_instance(self, group, state: str) -> Instance:
+        from repro.api.run import build
+        self._built += 1
+        name = f"{group.name}-{self._built - 1}"
+        sub = instance_subspec(self.spec, group,
+                               seed=self.spec.seed + 7919 * self._built)
+        a = self.fleet.autoscaler
+        has_spares = (a is not None and a.pd_rebalance and a.pd_spares > 0
+                      and sub.topology.preset == "pd")
+        if has_spares:
+            # standby capacity for P:D rebalancing: build each pool with
+            # pd_spares extra replicas; provision_spares parks the extras
+            # inactive (they hold no GPUs until a pool move enables them).
+            # Only the pd preset's pool knobs support this — inline PD
+            # graphs keep their declared replica counts untouched.
+            from dataclasses import replace
+            sub.topology = replace(sub.topology,
+                                   n_prefill=sub.topology.n_prefill
+                                   + a.pd_spares,
+                                   n_decode=sub.topology.n_decode
+                                   + a.pd_spares)
+        handle = build(sub, hardware=self._hardware, ops=self._ops,
+                       engine=self.engine)
+        if self._engine_overhead is not None:
+            for cluster in handle.clusters.values():
+                for w in cluster.replicas:
+                    w.predictor.engine_overhead = self._engine_overhead
+        if has_spares:
+            # park the extras BEFORE the Instance samples its device
+            # count, so standbys never enter peak/GPU-second accounting
+            for cluster in handle.clusters.values():
+                pool = cluster.active_replicas()
+                for w in pool[len(pool) - a.pd_spares:]:
+                    w.active = False
+        inst = Instance(name, group, handle,
+                        created_at=self.engine.now, state=state)
+        inst.has_spares = has_spares
+        handle.controller.observer = \
+            lambda r, w, inst=inst: self._on_complete(inst, r)
+        self.instances[name] = inst
+        inst.touch(self.engine.now)
+        return inst
+
+    def _apply_faults(self) -> None:
+        """Faults land on the FIRST instance of the named group (or of the
+        first group when ``instance`` is unset)."""
+        from repro.api.spec import SpecError
+        for i, f in enumerate(self.spec.faults):
+            group = self.fleet.instance_by_name(f.instance)
+            inst = next(x for x in self.instances.values()
+                        if x.group is group)
+            cluster = inst.handle.clusters.get(f.cluster)
+            if cluster is None:
+                raise SpecError(
+                    f"faults[{i}].cluster: instance group "
+                    f"{group.name!r} has no cluster {f.cluster!r} "
+                    f"(clusters: {sorted(inst.handle.clusters)})")
+            if f.replica >= len(cluster.replicas):
+                raise SpecError(
+                    f"faults[{i}].replica: index {f.replica} out of range "
+                    f"— cluster {f.cluster!r} of {inst.name!r} has "
+                    f"{len(cluster.replicas)} replicas")
+            if f.kind == "failure":
+                inst.controller.inject_failure(f.cluster, f.replica,
+                                               at=f.at, downtime=f.downtime)
+            else:
+                cluster.replicas[f.replica].slowdown = f.slowdown
+
+    def _track_peak(self) -> None:
+        now = sum(i.provisioned_devices() for i in self.instances.values())
+        if now > self.peak_devices:
+            self.peak_devices = now
+
+    # ------------------------------------------------------------ arrivals --
+    def submit_all(self, requests: List) -> None:
+        """Stamp tenants (rid order, so assignment is independent of event
+        interleaving) and schedule one fleet-level arrival per request."""
+        self.total_requests = len(requests)
+        self.last_arrival = max((r.arrival for r in requests), default=0.0)
+        if self.tenants:
+            draws = self.rng.choice(len(self.tenants), size=len(requests),
+                                    p=self._tenant_p)
+            for r, d in zip(requests, draws):
+                t = self.tenants[int(d)]
+                r.tenant = t.name
+                r.timestamps["priority"] = float(t.priority)
+        for r in requests:
+            self.engine.at(r.arrival, EV.REQUEST_ARRIVAL,
+                           lambda ev, r=r: self._arrive(r), rid=r.rid,
+                           fleet=True)
+        if self.autoscaler is not None:
+            self.autoscaler.start()
+
+    def routable_instances(self) -> List[Instance]:
+        return [i for i in self.instances.values() if i.routable]
+
+    def _arrive(self, r) -> None:
+        now = self.engine.now
+        candidates = self.routable_instances()
+        if not candidates:
+            raise RuntimeError("fleet: no active instances to route to")
+        chosen = self.router.select(r, candidates, now, self.rng)
+        # an instance whose entry replicas are all down (fault injection)
+        # rejects; spill to the remaining instances before giving up
+        for inst in [chosen] + [i for i in candidates if i is not chosen]:
+            try:
+                inst.accept(r, now)
+                return
+            except RuntimeError:
+                continue
+        raise RuntimeError("fleet: no instance has healthy entry replicas")
+
+    # --------------------------------------------------------- completions --
+    def _on_complete(self, inst: Instance, r) -> None:
+        if self.autoscaler is not None:     # its attainment window is the
+            self.recent_completed.append(r)  # only consumer of this list
+        inst.touch(self.engine.now)
+        if inst.state == DRAINING and inst.outstanding() == 0:
+            inst.stop(self.engine.now)
+            self._record("drained", inst)
+
+    def outstanding(self) -> int:
+        return sum(i.outstanding() for i in self.instances.values())
+
+    # ------------------------------------------------------- scale actions --
+    def _record(self, kind: str, inst: Instance, **extra) -> None:
+        self.scale_events.append(dict(
+            t=self.engine.now, kind=kind, instance=inst.name, **extra))
+
+    def scale_up(self, group) -> Instance:
+        """Provision one more instance of ``group`` with a modeled cold
+        start: per-device weight bytes over the provision bandwidth plus
+        the runtime bring-up floor.  Routable once INSTANCE_READY fires."""
+        a = self.fleet.autoscaler
+        inst = self._build_instance(group, state=STARTING)
+        first = next(iter(inst.handle.clusters.values())).replicas[0]
+        cold = (first.predictor.weight_bytes_per_device() / a.provision_bw
+                + a.startup_base_s)
+        self.engine.after(cold, EV.INSTANCE_READY,
+                          lambda ev, inst=inst: self._instance_ready(inst),
+                          instance=inst.name)
+        self._record("scale_up", inst, cold_start_s=cold)
+        self._track_peak()
+        return inst
+
+    def _instance_ready(self, inst: Instance) -> None:
+        inst.activate(self.engine.now)
+        self._record("ready", inst)
+        self._track_peak()
+
+    def scale_down(self, inst: Instance) -> None:
+        """Drain: stop routing to ``inst``; it finishes residents and then
+        releases its GPUs (``_on_complete`` notices the drain emptying)."""
+        inst.drain(self.engine.now)
+        self._record("scale_down", inst)
+        if inst.outstanding() == 0:
+            inst.stop(self.engine.now)
+            self._record("drained", inst)
+
+    def rebalance_pd(self, inst: Instance, donor_role: str,
+                     needy_role: str) -> bool:
+        """Move one replica of capacity between an instance's P and D
+        pools: drain one ``donor_role`` replica now, enable a standby
+        ``needy_role`` replica after the modeled weight reload."""
+        spares = inst.pool_replicas(needy_role, active=False)
+        spare = next((w for w in spares
+                      if not (w.waiting or w.running or w.busy)), None)
+        donors = inst.pool_replicas(donor_role, active=True)
+        if spare is None or len(donors) <= 1:
+            return False
+        donor = max(donors, key=lambda w: (w.load(), w.name))
+        donor.active = False
+        self._moves_in_flight += 1
+
+        def enable(ev, w=spare, inst=inst):
+            self._moves_in_flight -= 1
+            w.active = True
+            w.kick()
+            inst.touch(self.engine.now)
+            self._track_peak()
+
+        self.engine.after(self.fleet.autoscaler.reconfigure_s,
+                          EV.POOL_RECONFIGURED, enable,
+                          instance=inst.name, role=needy_role)
+        self._record("rebalance", inst, moved=f"{donor_role}->{needy_role}",
+                     donor=donor.name, spare=spare.name)
+        inst.touch(self.engine.now)
+        return True
+
+    # ----------------------------------------------------------- finishing --
+    def finalize(self) -> None:
+        """Close the GPU-second integrals at the END OF THE WORKLOAD (the
+        last completion/token), not at engine.now — trailing autoscaler
+        ticks drain the event heap up to interval_s past the last
+        completion, and charging that tail as idle capacity would make
+        autoscaler-on runs look wasteful even when it never acted."""
+        end = max((i.controller.metrics.end
+                   for i in self.instances.values()), default=0.0)
+        if end <= 0.0:          # horizon cut before any token: use now
+            end = self.engine.now
+        for inst in self.instances.values():
+            inst.touch(end)
+        self._track_peak()
+
+    def conservation_check(self) -> Dict[str, int]:
+        states: Dict[str, int] = {}
+        for inst in self.instances.values():
+            for k, v in inst.controller.conservation_check().items():
+                states[k] = states.get(k, 0) + v
+        return states

@@ -1,0 +1,183 @@
+"""``run_fleet(spec) -> FleetReport``: execute a fleet SimSpec.
+
+The FleetReport aggregates per-instance Reports (summary + cluster
+breakdown per instance) under fleet-level metrics: per-tenant SLO
+attainment, routing imbalance, the scale-event log, and provisioned-but-
+idle GPU-seconds.  Its surface mirrors :class:`repro.api.run.Report`
+(``summary`` / ``spec_hash`` / ``save`` / item access), so the CLI, sweep
+runner, and pareto helpers work on fleets unchanged.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from datetime import datetime, timezone
+from typing import Any, Dict, List, Optional
+
+from repro.api.run import ReportBase
+from repro.core.engine import SimEngine
+from repro.core.metrics import MetricsCollector, _mean, _pct, slo_attainment
+from repro.fleet.controller import FleetController
+from repro.fleet.instance import Instance
+
+
+@dataclass
+class FleetReport(ReportBase):
+    """Typed result of one fleet simulation (JSON-serializable; shares
+    Report's serialization surface via :class:`ReportBase`)."""
+    name: str
+    spec: Dict[str, Any]
+    spec_hash: str
+    summary: Dict[str, Any]
+    instances: Dict[str, Dict[str, Any]]     # per-instance sub-reports
+    tenants: Dict[str, Dict[str, Any]]       # per-tenant-class metrics
+    scale_events: List[Dict[str, Any]]
+    conservation: Dict[str, int]
+    all_complete: bool
+    n_devices: int                            # peak provisioned devices
+    sim_events: int
+    sim_duration_s: float
+    wall_clock_s: float
+    created_at: str
+    point: Optional[Dict[str, Any]] = None    # sweep-axis assignment
+
+
+# ------------------------------------------------------------- assembly --
+def _instance_block(inst: Instance, spec) -> Dict[str, Any]:
+    from repro.api.run import _cluster_breakdown
+    ctrl = inst.controller
+    # per-device stats use the instance's PEAK PROVISIONED devices (the
+    # same basis as the fleet summary) — handle.n_devices would count
+    # parked P:D standby replicas that never held GPUs
+    summary = ctrl.metrics.report(
+        n_devices=inst.peak_devices or inst.handle.n_devices,
+        slo_ttft=spec.slo.ttft_s if spec.slo else None,
+        slo_tpot=spec.slo.tpot_s if spec.slo else None)
+    return {
+        "group": inst.group.name,
+        "state": inst.state,
+        "devices": inst.peak_devices,
+        "created_at_s": inst.created_at,
+        "active_at_s": inst.active_at,
+        "stopped_at_s": inst.stopped_at,
+        "routed": inst.routed,
+        "outstanding": inst.outstanding(),
+        "gpu_seconds": inst.gpu_seconds,
+        "busy_gpu_seconds": inst.busy_gpu_seconds(),
+        "summary": summary,
+        "clusters": _cluster_breakdown(inst.handle),
+        "conservation": ctrl.conservation_check(),
+    }
+
+
+def _tenant_block(spec, completed) -> Dict[str, Dict[str, Any]]:
+    out: Dict[str, Dict[str, Any]] = {}
+    for t in spec.fleet.tenants:
+        mine = [r for r in completed if r.tenant == t.name]
+        ttfts = [r.ttft() for r in mine if r.ttft() is not None]
+        ttft = t.ttft_s if t.ttft_s is not None \
+            else (spec.slo.ttft_s if spec.slo else None)
+        tpot = t.tpot_s if t.tpot_s is not None \
+            else (spec.slo.tpot_s if spec.slo else None)
+        out[t.name] = {
+            "n_completed": len(mine),
+            "priority": t.priority,
+            "ttft_p50_s": _pct(ttfts, 50),
+            "ttft_p99_s": _pct(ttfts, 99),
+            "ttft_mean_s": _mean(ttfts),
+            "slo_ttft_s": ttft,
+            "slo_tpot_s": tpot,
+            "slo_attainment": slo_attainment(mine, ttft_s=ttft,
+                                             tpot_s=tpot),
+        }
+    return out
+
+
+def _routing_imbalance(instances: Dict[str, Instance]) -> Optional[float]:
+    """Coefficient of variation of per-instance routed-request counts —
+    0 means perfectly even; grows with hot-spotting."""
+    counts = [i.routed for i in instances.values()]
+    if not counts or sum(counts) == 0:
+        return None
+    mean = sum(counts) / len(counts)
+    var = sum((c - mean) ** 2 for c in counts) / len(counts)
+    return (var ** 0.5) / mean
+
+
+# ------------------------------------------------------------------ run --
+def run_fleet(spec, *, hardware=None, ops=None,
+              engine_overhead=None) -> FleetReport:
+    """Validate, build, and run one fleet experiment (see module doc)."""
+    t0 = time.perf_counter()
+    spec.validate()
+    engine = SimEngine()
+    fc = FleetController(spec, engine, hardware=hardware, ops=ops,
+                         engine_overhead=engine_overhead)
+    requests = spec.workload.build_requests(spec.seed)
+    fc.submit_all(requests)
+    engine.run(spec.until if spec.until is not None else float("inf"))
+    fc.finalize()
+    wall = time.perf_counter() - t0
+
+    insts = fc.instances
+    merged = MetricsCollector.merged(
+        [i.controller.metrics for i in insts.values()])
+    summary = merged.report(
+        n_devices=fc.peak_devices,
+        slo_ttft=spec.slo.ttft_s if spec.slo else None,
+        slo_tpot=spec.slo.tpot_s if spec.slo else None)
+    # fleet-level observables
+    kinds = [e["kind"] for e in fc.scale_events]
+    gpu_s = sum(i.gpu_seconds for i in insts.values())
+    busy_s = sum(i.busy_gpu_seconds() for i in insts.values())
+    summary.update({
+        "fleet_instances_built": len(insts),
+        "fleet_instances_active_end": sum(
+            1 for i in insts.values() if i.routable),
+        "scale_up_events": kinds.count("scale_up"),
+        "scale_down_events": kinds.count("scale_down"),
+        "rebalance_events": kinds.count("rebalance"),
+        "routing_imbalance": _routing_imbalance(insts),
+        "provisioned_gpu_seconds": gpu_s,
+        "idle_gpu_seconds": max(gpu_s - busy_s, 0.0),
+    })
+    # fleet prefix-cache hit rate (the prize cache-aware routing chases)
+    hit = prompt = 0
+    transfers: Dict[str, float] = {}
+    for inst in insts.values():
+        for cluster in inst.handle.clusters.values():
+            for w in cluster.replicas:
+                if w.memory is not None:
+                    hit += w.memory.hit_tokens
+                    prompt += w.memory.prompt_tokens
+        ts = inst.controller.transfer_stats
+        for k, v in ts.items():
+            transfers[k] = transfers.get(k, 0.0) + v
+    if prompt:
+        summary["prefix_hit_token_frac"] = hit / prompt
+    if transfers.get("transfers"):
+        summary["kv_transfer_count"] = transfers["transfers"]
+        summary["kv_transfer_serial_s"] = transfers["serial_s"]
+        summary["kv_transfer_exposed_s"] = transfers["exposed_s"]
+    tenants = _tenant_block(spec, merged.completed)
+    attains = [t["slo_attainment"] for t in tenants.values()
+               if t["slo_attainment"] is not None]
+    if attains:
+        summary["tenant_slo_attainment_min"] = min(attains)
+    conservation = fc.conservation_check()
+    return FleetReport(
+        name=spec.name,
+        spec=spec.to_dict(),
+        spec_hash=spec.spec_hash(),
+        summary=summary,
+        instances={n: _instance_block(i, spec) for n, i in insts.items()},
+        tenants=tenants,
+        scale_events=fc.scale_events,
+        conservation=conservation,
+        all_complete=(conservation == {"complete": len(requests)}),
+        n_devices=fc.peak_devices,
+        sim_events=engine.processed,
+        sim_duration_s=summary.get("duration_s", 0.0),
+        wall_clock_s=wall,
+        created_at=datetime.now(timezone.utc).isoformat(timespec="seconds"),
+    )

@@ -10,6 +10,7 @@ import numpy as np
 from repro.core.request import Request
 
 ARRIVALS = ("poisson", "uniform", "burst", "closed")
+RATE_CURVES = ("diurnal",)
 
 
 @dataclass
@@ -45,6 +46,15 @@ class WorkloadConfig:
     # under congestion, as an impatient client's would)
     turns: int = 1
     turn_gap: float = 5.0
+    # fleet-scale arrival shaping: "diurnal" modulates the poisson rate
+    # sinusoidally — lambda(t) = rate * (1 + amplitude*sin(2*pi*t/period)) —
+    # so autoscalers have a realistic load swing to chase.  Arrivals come
+    # from the exact non-homogeneous process via time rescaling (unit-rate
+    # exponential gaps inverted through the integrated rate), not thinning,
+    # so the trace is deterministic in the seed.
+    rate_curve: Optional[str] = None      # None | "diurnal"
+    rate_period: float = 60.0             # seconds per diurnal cycle
+    rate_amplitude: float = 0.5           # relative swing, in [0, 1)
     seed: int = 0
 
 
@@ -66,12 +76,59 @@ def _lengths(kind: str, mean: int, maxv: int, n: int,
     return np.clip(v.astype(np.int64), 1, maxv)
 
 
+def _diurnal_arrivals(cfg: WorkloadConfig, n: int,
+                      rng: np.random.Generator) -> np.ndarray:
+    """Non-homogeneous poisson arrivals under the diurnal rate curve.
+
+    Time rescaling: draw unit-rate exponential targets s_i, then invert the
+    integrated rate Lambda(t) = rate*(t + A*P/(2*pi)*(1 - cos(2*pi*t/P)))
+    by (vectorized) bisection — Lambda is strictly increasing for A < 1.
+    """
+    a, period, rate = cfg.rate_amplitude, cfg.rate_period, cfg.rate
+    if a <= 0:
+        gaps = rng.exponential(1.0 / rate, n)
+        return np.cumsum(gaps)
+    targets = np.cumsum(rng.exponential(1.0, n))
+    w = 2.0 * np.pi / period
+
+    def big_lambda(t):
+        return rate * (t + a / w * (1.0 - np.cos(w * t)))
+
+    lo = np.zeros(n)
+    # lambda(t) >= rate*(1-a) everywhere, so t <= s / (rate*(1-a))
+    hi = targets / (rate * (1.0 - a)) + period
+    for _ in range(64):           # ~2e-19 relative interval after 64 halvings
+        mid = 0.5 * (lo + hi)
+        below = big_lambda(mid) < targets
+        lo = np.where(below, mid, lo)
+        hi = np.where(below, hi, mid)
+    return 0.5 * (lo + hi)
+
+
 def generate(cfg: WorkloadConfig) -> List[Request]:
     rng = np.random.default_rng(cfg.seed)
     n = cfg.n_requests
+    if cfg.rate_curve is not None and cfg.rate_curve not in RATE_CURVES:
+        raise ValueError(f"unknown rate_curve {cfg.rate_curve!r}; "
+                         f"known: {RATE_CURVES}")
+    if cfg.rate_curve == "diurnal":
+        if cfg.arrival != "poisson":
+            raise ValueError("rate_curve='diurnal' modulates the poisson "
+                             f"arrival process; got arrival={cfg.arrival!r}")
+        if not 0.0 <= cfg.rate_amplitude < 1.0:
+            # amplitude >= 1 makes the integrated rate non-invertible
+            # (lambda touches zero) — fail instead of emitting inf/garbage
+            raise ValueError(f"rate_amplitude must be in [0, 1), "
+                             f"got {cfg.rate_amplitude}")
+        if cfg.rate_period <= 0:
+            raise ValueError(f"rate_period must be > 0, "
+                             f"got {cfg.rate_period}")
     if cfg.arrival == "poisson":
-        gaps = rng.exponential(1.0 / cfg.rate, n)
-        arrivals = np.cumsum(gaps)
+        if cfg.rate_curve == "diurnal":
+            arrivals = _diurnal_arrivals(cfg, n, rng)
+        else:
+            gaps = rng.exponential(1.0 / cfg.rate, n)
+            arrivals = np.cumsum(gaps)
     elif cfg.arrival == "uniform":
         arrivals = np.sort(rng.uniform(0, n / cfg.rate, n))
     elif cfg.arrival == "burst":

@@ -45,6 +45,40 @@ SPECS = {
         "pipeline": {"preset": "two_batch", "ep_overlap": 0.5},
         "seed": 13,
     },
+    # the fleet control plane end-to-end: a heterogeneous PD+colocated
+    # fleet behind cache-aware routing, tenant classes with per-class
+    # SLOs, and an autoscaler chasing a diurnal arrival curve
+    "fleet_pd": {
+        "name": "golden-fleet-pd",
+        "model": {"name": "qwen2-7b", "smoke": True},
+        "topology": {"preset": "colocated"},
+        "workload": {"n_requests": 120, "rate": 40.0,
+                     "rate_curve": "diurnal", "rate_period": 10.0,
+                     "rate_amplitude": 0.7, "prompt_mean": 256,
+                     "output_mean": 32, "prefix_groups": 4,
+                     "prefix_len": 256, "seed": 15},
+        "memory": {"manager": "prefix"},
+        "slo": {"ttft_s": 0.5, "tpot_s": 0.05},
+        "fleet": {
+            "instances": [
+                {"name": "colo", "count": 2},
+                {"name": "pd", "count": 1,
+                 "topology": {"preset": "pd", "n_prefill": 1,
+                              "n_decode": 1}},
+            ],
+            "router": "prefix_affinity",
+            "autoscaler": {"min_instances": 1, "max_instances": 4,
+                           "interval_s": 0.5, "cooldown_s": 1.0,
+                           "up_queue_depth": 8.0,
+                           "down_queue_depth": 1.0},
+            "tenants": [
+                {"name": "paid", "weight": 1, "ttft_s": 0.3},
+                {"name": "free", "weight": 3, "ttft_s": 1.0,
+                 "priority": 1},
+            ],
+        },
+        "seed": 15,
+    },
     # the memory subsystem end-to-end: prefix-caching manager on a
     # shared-prefix workload, layer-wise streamed KV transfer, and a
     # capacity small enough that decode growth preempts (recompute)
