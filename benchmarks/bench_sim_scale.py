@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 from typing import Dict, List, Tuple
 
 from repro.api import SimSpec, run
@@ -26,6 +27,59 @@ def _spec(name: str, body: dict) -> SimSpec:
     d = dict(body)
     d["name"] = name
     return SimSpec.from_dict(d)
+
+
+def _bench_engine_core(n_events: int, burst: int = 64) -> dict:
+    """Raw event-core throughput in the shape of the simulator hot loop:
+    arrivals land in bursts of ``burst`` on the bulk timeline and drain
+    through the same-timestamp batch handler, with one self-rescheduling
+    scheduler tick per burst — no simulation logic on top."""
+    from repro.core.engine import SimEngine
+    from repro.core.events import EV
+    n_bursts = max(n_events // (burst + 1), 1)
+    eng = SimEngine(max_events=n_events + 10)
+    seen = [0]
+    eng.register_batch_handler(
+        EV.REQUEST_ARRIVAL,
+        lambda evs: seen.__setitem__(0, seen[0] + len(evs)))
+    eng.schedule_timeline(
+        ((i // burst) * 1e-3, EV.REQUEST_ARRIVAL, None, None)
+        for i in range(n_bursts * burst))
+    left = [n_bursts]
+
+    def tick(ev):
+        left[0] -= 1
+        if left[0] > 0:
+            eng.after(1e-3, EV.SCHEDULE_TICK, tick)
+
+    eng.at(0.0, EV.SCHEDULE_TICK, tick)
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    assert seen[0] == n_bursts * burst
+    return {"events": eng.processed, "wall_s": wall,
+            "events_per_s": eng.processed / wall, "burst": burst}
+
+
+def _fleet_1m_body(n_requests: int, n_inst: int) -> dict:
+    """Million-request fleet cell: ``n_inst`` single-replica instances in
+    windowed mode with the numpy predictor backend and O(1) round-robin
+    routing — the configuration the PR6 tentpole targets (1M requests
+    across 100+ instances in minutes)."""
+    return {
+        "model": {"name": "qwen2-7b", "smoke": True},
+        "topology": {"preset": "colocated"},
+        "opmodel": {"backend": "numpy"},
+        "workload": {"n_requests": n_requests,
+                     "rate": 4.0 * n_inst,
+                     "prompt_mean": 128, "output_mean": 8, "seed": 0},
+        "fleet": {
+            "instances": [{"name": "colo", "count": n_inst}],
+            "router": "round_robin",
+            "engine": "windowed",
+            "window_s": 0.25,
+        },
+    }
 
 
 def _cells(n_cell: int) -> Dict[str, dict]:
@@ -84,9 +138,21 @@ def _cells(n_cell: int) -> Dict[str, dict]:
     }
 
 
-def run_bench(smoke: bool = False) -> Tuple[List[str], dict]:
+def run_bench(smoke: bool = False, fleet_1m: bool = False
+              ) -> Tuple[List[str], dict]:
     lines: List[str] = []
     results: dict = {"smoke": smoke, "cells": {}}
+
+    # ---- raw event core ---------------------------------------------------
+    n_core = 200_000 if smoke else 2_000_000
+    core = _bench_engine_core(n_core)
+    core.update(engine_mode="serial", predictor_backend="n/a")
+    results["engine_core"] = core
+    lines.append(
+        f"engine_core_{n_core // 1000}k,"
+        f"{core['wall_s'] * 1e6 / max(core['events'], 1):.2f},"
+        f"events={core['events']};"
+        f"events_per_s={core['events_per_s']:,.0f}")
 
     # ---- scale: 16-replica cluster ----------------------------------------
     n_scale = 200 if smoke else 2000
@@ -101,6 +167,7 @@ def run_bench(smoke: bool = False) -> Tuple[List[str], dict]:
         "events_per_s": ev / wall,
         "sim_speedup": rep.sim_duration_s / wall,
         "completed": rep.summary["n_completed"],
+        "engine_mode": "serial", "predictor_backend": "python",
     }
     lines.append(
         f"sim_scale_16replica_{n_scale}req,{wall * 1e6 / max(ev, 1):.2f},"
@@ -146,6 +213,7 @@ def run_bench(smoke: bool = False) -> Tuple[List[str], dict]:
         "prefix_hit_token_frac":
             rep.summary.get("prefix_hit_token_frac"),
         "routing_imbalance": rep.summary.get("routing_imbalance"),
+        "engine_mode": "serial", "predictor_backend": "python",
     }
     lines.append(
         f"fleet_{n_inst}inst_{n_fleet}req,{wall * 1e6 / max(ev, 1):.2f},"
@@ -153,6 +221,27 @@ def run_bench(smoke: bool = False) -> Tuple[List[str], dict]:
         f"completed={rep.summary['n_completed']};"
         f"scale_events={rep.summary['scale_up_events']}"
         f"+{rep.summary['scale_down_events']}")
+
+    # ---- fleet_1m: million-request windowed fleet -------------------------
+    # full size only behind --fleet-1m (minutes of wall clock); the smoke
+    # variant runs the same code path at CI-friendly scale
+    n_1m = 1_000_000 if fleet_1m else (10_000 if smoke else 50_000)
+    n_1m_inst = 100 if fleet_1m else (16 if smoke else 32)
+    rep = run(_spec("fleet-1m", _fleet_1m_body(n_1m, n_1m_inst)))
+    ev, wall = rep.sim_events, rep.wall_clock_s
+    results["fleet_1m"] = {
+        "n_requests": n_1m, "instances": n_1m_inst, "events": ev,
+        "wall_s": wall, "events_per_s": ev / wall,
+        "sim_speedup": rep.sim_duration_s / wall,
+        "completed": rep.summary["n_completed"],
+        "engine_mode": "windowed", "predictor_backend": "numpy",
+        "window_s": rep.summary.get("fleet_window_s"),
+    }
+    lines.append(
+        f"fleet_1m_{n_1m_inst}inst_{n_1m}req,"
+        f"{wall * 1e6 / max(ev, 1):.2f},"
+        f"events={ev};events_per_s={ev / wall:,.0f};"
+        f"completed={rep.summary['n_completed']};mode=windowed+numpy")
 
     # ---- Table-1 feature matrix -------------------------------------------
     n_cell = 20 if smoke else 100
@@ -167,6 +256,7 @@ def run_bench(smoke: bool = False) -> Tuple[List[str], dict]:
             "preemptions": rep.summary.get("preemptions", 0),
             "prefix_hit_token_frac":
                 rep.summary.get("prefix_hit_token_frac"),
+            "engine_mode": "serial", "predictor_backend": "python",
         }
         ttft = rep.summary["ttft_p50_s"]
         lines.append(
@@ -206,8 +296,12 @@ if __name__ == "__main__":
                          "(e.g. the repo-root BENCH_sim_scale.json)")
     ap.add_argument("--label", default="dev",
                     help="trajectory entry label (e.g. PR5)")
+    ap.add_argument("--fleet-1m", action="store_true",
+                    help="run the full fleet_1m cell (1M requests across "
+                         "100 windowed instances; minutes of wall clock)")
     args = ap.parse_args()
-    out_lines, out_results = run_bench(smoke=args.smoke)
+    out_lines, out_results = run_bench(smoke=args.smoke,
+                                       fleet_1m=args.fleet_1m)
     for l in out_lines:
         print(l)
     if args.json:

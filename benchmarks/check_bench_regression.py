@@ -1,0 +1,94 @@
+"""Bench-regression gate: fail CI when fleet events/s regresses.
+
+Compares a fresh ``bench_sim_scale.py --json`` result file against the
+last entry of the checked-in trajectory (repo-root
+``BENCH_sim_scale.json``) and exits non-zero if the watched cell's
+``events_per_s`` dropped more than ``--tolerance`` (default 20%) below
+the baseline.
+
+Baseline selection prefers the most recent trajectory entry whose cell
+was measured under a comparable configuration (same smoke flag,
+n_requests, instance count, and engine mode); if none matches it falls
+back to the most recent entry that has the cell at all and says so —
+events/s is a rate, so cross-scale comparison is meaningful, just
+noisier.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+COMPARABLE_KEYS = ("n_requests", "instances", "engine_mode",
+                   "predictor_backend")
+
+
+def _cell_cfg(entry: dict, cell: str) -> dict:
+    c = entry.get(cell) or {}
+    cfg = {k: c.get(k) for k in COMPARABLE_KEYS}
+    cfg["smoke"] = entry.get("smoke")
+    return cfg
+
+
+def pick_baseline(trajectory: list, cell: str, fresh_cfg: dict):
+    """Most recent comparable entry, else most recent with the cell."""
+    with_cell = [e for e in trajectory
+                 if isinstance(e.get(cell), dict)
+                 and "events_per_s" in e[cell]]
+    if not with_cell:
+        return None, False
+    for e in reversed(with_cell):
+        if _cell_cfg(e, cell) == fresh_cfg:
+            return e, True
+    return with_cell[-1], False
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", required=True,
+                    help="fresh bench_sim_scale.py --json output")
+    ap.add_argument("--trajectory", default="BENCH_sim_scale.json",
+                    help="checked-in cross-PR trajectory file")
+    ap.add_argument("--cell", default="fleet",
+                    help="which result cell to gate on")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="max allowed fractional drop in events_per_s")
+    args = ap.parse_args(argv)
+
+    with open(args.results) as f:
+        fresh = json.load(f)
+    cell = fresh.get(args.cell)
+    if not isinstance(cell, dict) or "events_per_s" not in cell:
+        print(f"gate: results file has no '{args.cell}' cell with "
+              f"events_per_s — nothing to gate")
+        return 1
+
+    with open(args.trajectory) as f:
+        traj = json.load(f).get("trajectory", [])
+    fresh_cfg = _cell_cfg(fresh, args.cell)
+    base, comparable = pick_baseline(traj, args.cell, fresh_cfg)
+    if base is None:
+        print(f"gate: no trajectory entry has cell '{args.cell}' — "
+              f"pass (nothing to compare against)")
+        return 0
+
+    base_eps = base[args.cell]["events_per_s"]
+    fresh_eps = cell["events_per_s"]
+    floor = (1.0 - args.tolerance) * base_eps
+    note = "" if comparable else (
+        "  [non-comparable config: "
+        f"baseline={_cell_cfg(base, args.cell)} fresh={fresh_cfg}]")
+    print(f"gate: cell={args.cell} baseline={base.get('label', '?')} "
+          f"{base_eps:,.0f} ev/s -> fresh {fresh_eps:,.0f} ev/s "
+          f"(floor {floor:,.0f}, tolerance {args.tolerance:.0%}){note}")
+    if fresh_eps < floor:
+        print(f"gate: FAIL — events_per_s dropped "
+              f"{1.0 - fresh_eps / base_eps:.1%} "
+              f"(> {args.tolerance:.0%} allowed)")
+        return 1
+    print("gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -117,26 +117,26 @@ def build(spec: SimSpec, *,
             raise SpecError(f"policy.batching: {e}") from e
 
     if topo.preset == "colocated":
-        return build_colocated(
+        handle = build_colocated(
             cfg, hw, n_replicas=topo.n_replicas,
             par=ParallelismConfig(tp=topo.tp, pp=topo.pp, ep=topo.ep),
             policy=batching("colocated", "colocated"), **common)
-    if topo.preset == "pd":
-        return build_pd(
+    elif topo.preset == "pd":
+        handle = build_pd(
             cfg, hw, n_prefill=topo.n_prefill, n_decode=topo.n_decode,
             prefill_par=ParallelismConfig(tp=topo.prefill_tp),
             decode_par=ParallelismConfig(tp=topo.decode_tp),
             prefill_policy=batching("prefill", "prefill"),
             decode_policy=batching("decode", "decode"),
             transfer_bw=topo.transfer_bw, **common)
-    if topo.preset == "af":
+    elif topo.preset == "af":
         common.pop("memoize")
         link = None
         if topo.expert_link_bw is not None:
             link = LinkSpec("decode", "decode-experts",
                             bandwidth=topo.expert_link_bw,
                             latency=topo.expert_link_latency)
-        return build_af(
+        handle = build_af(
             cfg, hw, n_prefill=topo.n_prefill, n_decode=topo.n_decode,
             m=topo.m, attn_par=ParallelismConfig(tp=topo.attn_tp),
             ffn_par=ParallelismConfig(tp=topo.ffn_tp, ep=topo.ffn_ep),
@@ -146,12 +146,18 @@ def build(spec: SimSpec, *,
                                            "topology.expert_cluster_hw")
                                if topo.expert_cluster_hw else None),
             expert_link=link, memoize=topo.memoize, **common)
-    # inline StageGraph
-    graph = topo.inline_graph(batching=lambda role, name:
-                              pol.batching_for(role, name))
-    return build_system(cfg, hw, graph, transfer_bw=topo.transfer_bw,
-                        **{k: v for k, v in common.items()
-                           if k != "memoize"})
+    else:
+        # inline StageGraph
+        graph = topo.inline_graph(batching=lambda role, name:
+                                  pol.batching_for(role, name))
+        handle = build_system(cfg, hw, graph, transfer_bw=topo.transfer_bw,
+                              **{k: v for k, v in common.items()
+                                 if k != "memoize"})
+    if spec.opmodel.backend != "python":
+        for cluster in handle.clusters.values():
+            for w in cluster.replicas:
+                w.predictor.backend = spec.opmodel.backend
+    return handle
 
 
 def _apply_faults(spec: SimSpec, handle: SystemHandle) -> None:
@@ -231,6 +237,23 @@ def _cluster_breakdown(handle: SystemHandle) -> Dict[str, Dict[str, Any]]:
     return out
 
 
+def predictor_cache_stats(handle: SystemHandle) -> Dict[str, Any]:
+    """Memo-cache effectiveness across every replica predictor: how much
+    simulated work the shape-bucketed step cache absorbed (the dominant
+    hot-path shortcut, so a collapsed hit rate explains a slow run)."""
+    hits = misses = 0
+    for cluster in handle.clusters.values():
+        for w in cluster.replicas:
+            hits += w.predictor.cache_hits
+            misses += w.predictor.cache_misses
+    total = hits + misses
+    return {
+        "predictor_cache_hits": hits,
+        "predictor_cache_misses": misses,
+        "predictor_cache_hit_rate": (hits / total) if total else None,
+    }
+
+
 # ------------------------------------------------------------------- run --
 def run(spec: SimSpec, *,
         hardware: Optional[HardwareSpec] = None,
@@ -289,6 +312,7 @@ def run(spec: SimSpec, *,
         hit_toks = sum(c["memory"]["prefix_hit_tokens"]
                        for c in clusters.values() if "memory" in c)
         summary["prefix_hit_token_frac"] = hit_toks / prompt_toks
+    summary.update(predictor_cache_stats(handle))
     ts = handle.controller.transfer_stats
     if ts["transfers"]:
         summary["kv_transfer_count"] = ts["transfers"]

@@ -564,15 +564,32 @@ class MemorySpec:
             raise SpecError(f"memory.manager: {e}") from e
 
 
+PREDICTOR_BACKENDS = ("python", "numpy", "jit")
+
+
 @dataclass
 class OpModelSpec:
-    """Operator-model family for the ExecutionPredictor."""
+    """Operator-model family for the ExecutionPredictor.
+
+    ``backend`` selects the step-cost evaluation path: ``python`` (default)
+    walks the operator graph per step with a full parts breakdown;
+    ``numpy`` prices cache-miss steps through the vectorized fused
+    roofline kernel; ``jit`` additionally compiles that kernel with
+    ``jax.jit`` (float32 — totals match python to ~1e-9 relative, not
+    bitwise).  Models the kernel can't reproduce (MoE routing draws,
+    refined operator models) silently fall back to python.
+    """
     name: str = "analytical"
+    backend: str = "python"
 
     def validate(self) -> None:
         if self.name not in OPMODELS:
             raise SpecError(f"opmodel.name: unknown operator model "
                             f"{self.name!r}; available: {sorted(OPMODELS)}")
+        if self.backend not in PREDICTOR_BACKENDS:
+            raise SpecError(f"opmodel.backend: unknown predictor backend "
+                            f"{self.backend!r}; available: "
+                            f"{list(PREDICTOR_BACKENDS)}")
 
 
 @dataclass
@@ -713,11 +730,24 @@ class FleetSpec:
     optionally ``{"name": ..., **kwargs}``); ``autoscaler`` enables
     SLO-driven scaling; ``tenants`` declares tenant classes with per-class
     SLOs/priorities (requests are assigned by weighted draw).
+
+    ``engine`` selects the fleet execution mode: ``serial`` (default)
+    interleaves every instance on one event heap; ``windowed`` runs each
+    instance on its own sub-engine, advancing all of them in conservative
+    time windows of ``window_s`` seconds between fleet-level barriers —
+    same arrivals, same routing decisions, deterministic given the window
+    (``window_s == 0`` reproduces serial results exactly; larger windows
+    trade cross-instance signal freshness for synchronization cost).
     """
     instances: List[InstanceSpec] = field(default_factory=list)
     router: Union[str, Dict[str, Any]] = "least_outstanding"
     autoscaler: Optional[AutoscalerSpec] = None
     tenants: List[TenantSpec] = field(default_factory=list)
+    engine: str = "serial"
+    window_s: float = 0.0
+
+    def __post_init__(self) -> None:
+        _coerce(self, float, "window_s")
 
     # ----------------------------------------------------------- parsing --
     @classmethod
@@ -789,6 +819,13 @@ class FleetSpec:
             resolve_fleet_router(self.router)
         except (KeyError, TypeError) as e:
             raise SpecError(f"fleet.router: {e}") from e
+        if self.engine not in ("serial", "windowed"):
+            raise SpecError(f"fleet.engine: unknown engine mode "
+                            f"{self.engine!r}; available: "
+                            f"['serial', 'windowed']")
+        if self.window_s < 0:
+            raise SpecError(f"fleet.window_s: must be >= 0, "
+                            f"got {self.window_s}")
         if self.autoscaler is not None:
             a = self.autoscaler
             if a.min_instances < 1 or a.max_instances < a.min_instances:

@@ -79,7 +79,10 @@ class ReplicaWorker:
         self.kick()
 
     def kick(self) -> None:
-        self.engine.after(0.0, EV.SCHEDULE_TICK, lambda ev: self._schedule())
+        self.engine.after(0.0, EV.SCHEDULE_TICK, self._schedule_ev)
+
+    def _schedule_ev(self, ev) -> None:
+        self._schedule()
 
     # ---------------------------------------------------------- scheduling --
     def _schedule(self) -> None:

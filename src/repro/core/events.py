@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import enum
 import itertools
-from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
 
@@ -51,13 +50,39 @@ class EV(enum.Enum):
 _seq = itertools.count()
 
 
-@dataclass(order=True)
 class Event:
-    time: float
-    seq: int = field(default_factory=lambda: next(_seq))
-    kind: EV = field(compare=False, default=EV.SCHEDULE_TICK)
-    fn: Optional[Callable[["Event"], None]] = field(compare=False, default=None)
-    data: Dict[str, Any] = field(compare=False, default_factory=dict)
+    """One scheduled event.  A plain ``__slots__`` class (not a dataclass):
+    the event heap is the simulator's single hottest allocation site, and a
+    per-event ``__dict__`` plus dataclass ``__lt__`` dispatch dominated the
+    profile at ~70k events/s.  The engine orders heap entries by a
+    ``(time, seq)`` tuple key at the C level; ``__lt__`` here only backs
+    direct comparisons in user code/tests.
+
+    ``data`` is ``None`` when the event carries no payload (the common
+    case) — consumers that iterate payloads use ``ev.data or {}``.
+    """
+
+    __slots__ = ("time", "seq", "kind", "fn", "data")
+
+    def __init__(self, time: float, kind: EV = EV.SCHEDULE_TICK,
+                 fn: Optional[Callable[["Event"], None]] = None,
+                 data: Optional[Dict[str, Any]] = None,
+                 seq: Optional[int] = None):
+        self.time = time
+        self.seq = next(_seq) if seq is None else seq
+        self.kind = kind
+        self.fn = fn
+        self.data = data
+
+    def __lt__(self, other: "Event") -> bool:
+        return (self.time, self.seq) < (other.time, other.seq)
+
+    def __eq__(self, other: object) -> bool:
+        return self is other
+
+    def __hash__(self) -> int:
+        return id(self)
 
     def __repr__(self) -> str:  # compact trace line
-        return f"Event(t={self.time:.6f}, {self.kind.value}, {self.data})"
+        return f"Event(t={self.time:.6f}, {self.kind.value}, " \
+               f"{self.data or {}})"

@@ -22,7 +22,10 @@ def _mean(xs: Sequence[float]) -> Optional[float]:
 @dataclass
 class MetricsCollector:
     completed: List[Request] = field(default_factory=list)
-    token_times: List[float] = field(default_factory=list)
+    # token events are counted, not stored: a per-token timestamp list is
+    # O(total output tokens) memory (hundreds of MB at million-request
+    # scale) and nothing consumed the individual times
+    token_count: int = 0
     # measurement-window start: anchored to the FIRST request arrival by the
     # controller (None until then) — measuring from t=0 silently inflates
     # the duration whenever the first arrival is late
@@ -30,8 +33,9 @@ class MetricsCollector:
     end: float = 0.0
 
     def on_token(self, r: Request, replica, t: float) -> None:
-        self.token_times.append(t)
-        self.end = max(self.end, t)
+        self.token_count += 1
+        if t > self.end:
+            self.end = t
 
     def on_complete(self, r: Request, replica) -> None:
         self.completed.append(r)
@@ -93,7 +97,7 @@ class MetricsCollector:
         out.end = max((c.end for c in collectors), default=0.0)
         for c in collectors:
             out.completed.extend(c.completed)
-            out.token_times.extend(c.token_times)
+            out.token_count += c.token_count
         return out
 
 

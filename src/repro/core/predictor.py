@@ -43,11 +43,22 @@ class StepBreakdown:
 _CACHE_QUANTUM = 1.05   # geometric bucket ratio for memo-cache shape keys
 
 
+_LOG_QUANTUM = math.log(_CACHE_QUANTUM)
+_QTZ_MEMO: Dict[int, int] = {}
+
+
 def _qtz(x: float) -> int:
-    """Quantize a positive magnitude into ~5% geometric buckets."""
-    if x <= 1:
-        return int(x)
-    return int(round(math.log(x) / math.log(_CACHE_QUANTUM)))
+    """Quantize a positive magnitude into ~5% geometric buckets.
+
+    Memoized on the exact argument: cache-key construction is on the
+    per-event hot path and token totals recur heavily, so the log()
+    usually collapses to one dict probe.
+    """
+    v = _QTZ_MEMO.get(x)
+    if v is None:
+        v = int(x) if x <= 1 else int(round(math.log(x) / _LOG_QUANTUM))
+        _QTZ_MEMO[x] = v
+    return v
 
 
 class ExecutionPredictor:
@@ -57,13 +68,24 @@ class ExecutionPredictor:
                  engine_overhead: float = 2e-3,
                  seed: int = 0,
                  memoize: bool = True,
-                 cache_size: int = 4096):
+                 cache_size: int = 4096,
+                 backend: str = "python"):
         self.cfg = cfg
         self.par = par
         self.hw = hw
         self.ops = ops
         self.routing = routing or BalancedRouting()
         self.engine_overhead = engine_overhead
+        if backend not in ("python", "numpy", "jit"):
+            raise ValueError(f"predictor backend must be 'python', 'numpy' "
+                             f"or 'jit', got {backend!r}")
+        # cost-evaluation backend: "python" walks the operator graph per
+        # call (exact parts breakdown, the default); "numpy"/"jit" price
+        # cache-miss steps through the vectorized fused roofline kernel
+        # (total only; falls back to python when the model/ops don't
+        # vectorize — MoE routing draws, subclassed operator models)
+        self.backend = backend
+        self._vec_supported: Optional[bool] = None
         self.rng = np.random.default_rng(seed)
         # step-time memoization: event-graph decode steps are expensive, and
         # serving batches recur in (quantized) shape — cache on the shape key
@@ -232,8 +254,8 @@ class ExecutionPredictor:
         ``memoize=False`` for exact per-step sampling.
         """
         if self._cache is None:
-            return self._step_time_impl(q_lens, kv_lens, decode=decode,
-                                        n_prefill=n_prefill)
+            return self._price_step(q_lens, kv_lens, decode=decode,
+                                    n_prefill=n_prefill)
         key = self._cache_key(q_lens, kv_lens, decode, n_prefill)
         bd = self._cache.get(key)
         if bd is not None:
@@ -242,12 +264,59 @@ class ExecutionPredictor:
             self._on_cache_hit(bd)
             return bd
         self.cache_misses += 1
-        bd = self._step_time_impl(q_lens, kv_lens, decode=decode,
-                                  n_prefill=n_prefill)
+        bd = self._price_step(q_lens, kv_lens, decode=decode,
+                              n_prefill=n_prefill)
         self._cache[key] = bd
         if len(self._cache) > self._cache_size:
             self._cache.popitem(last=False)
         return bd
+
+    def _price_step(self, q_lens, kv_lens, *, decode: bool,
+                    n_prefill: Optional[int]) -> StepBreakdown:
+        """Cache-miss pricing: the configured backend when it can
+        reproduce the scalar walk, else the exact python path."""
+        if (self.backend != "python" and n_prefill is None
+                and self._vectorized_ok()):
+            from repro.core.opmodels.batch import batch_step_totals
+            total = float(batch_step_totals(
+                self, [(q_lens, kv_lens)], decode=decode,
+                backend=self.backend)[0])
+            bd = StepBreakdown()
+            if total:
+                bd.add("step", total)   # coarse: no per-operator parts
+            return bd
+        return self._step_time_impl(q_lens, kv_lens, decode=decode,
+                                    n_prefill=n_prefill)
+
+    def _vectorized_ok(self) -> bool:
+        if self._vec_supported is None:
+            from repro.core.opmodels.batch import supports_vectorized
+            self._vec_supported = supports_vectorized(self)
+        return self._vec_supported
+
+    def step_time_batch(self, steps: Sequence[Tuple[Sequence[int],
+                                                    Sequence[int]]],
+                        *, decode: bool,
+                        backend: Optional[str] = None) -> np.ndarray:
+        """Per-step totals (seconds) for many batch shapes at once.
+
+        ``steps`` is a sequence of ``(q_lens, kv_lens)`` pairs; the result
+        is ``np.array([self.step_time(q, kv, decode=decode).total ...])``
+        evaluated exactly (no memo-cache quantization).  With the
+        ``numpy``/``jit`` backends the whole grid prices through the
+        fused roofline kernel in one shot; the ``python`` backend — and
+        any model the kernel can't reproduce (MoE routing draws,
+        subclassed operator models) — walks the scalar path per step,
+        preserving the RNG draw order.
+        """
+        backend = backend or self.backend
+        if backend != "python" and self._vectorized_ok():
+            from repro.core.opmodels.batch import batch_step_totals
+            return batch_step_totals(self, steps, decode=decode,
+                                     backend=backend)
+        return np.array([self._step_time_impl(list(q), list(kv),
+                                              decode=decode).total
+                         for q, kv in steps])
 
     def _step_time_impl(self, q_lens: Sequence[int], kv_lens: Sequence[int],
                         *, decode: bool,

@@ -13,7 +13,10 @@ class EventTrace:
         self.events: Deque[tuple] = deque(maxlen=capacity)
 
     def __call__(self, ev: Event) -> None:
-        self.events.append((ev.time, ev.kind.value, dict(ev.data)))
+        d = ev.data
+        if not isinstance(d, dict):      # timeline payloads are raw objects
+            d = {} if d is None else {"data": d}
+        self.events.append((ev.time, ev.kind.value, dict(d)))
 
     def filter(self, kind: EV) -> List[tuple]:
         return [e for e in self.events if e[1] == kind.value]

@@ -34,7 +34,13 @@ class FleetController:
         self._ops = ops
         self._engine_overhead = engine_overhead
         self.rng = np.random.default_rng([spec.seed, 0xF1EE7])
+        # windowed mode: every instance runs on its OWN sub-engine and the
+        # fleet engine only carries control-plane events (arrivals, ticks,
+        # lifecycle); repro.fleet.windowed advances them in conservative
+        # time windows.  Serial mode shares ONE engine across everything.
+        self.windowed = getattr(self.fleet, "engine", "serial") == "windowed"
         self.router = resolve_fleet_router(self.fleet.router)
+        self.router.fleet = self     # O(1) aggregate load signals
         self.instances: Dict[str, Instance] = {}
         self._built = 0                   # lifetime instance counter (seeds)
         self.scale_events: List[dict] = []
@@ -43,6 +49,11 @@ class FleetController:
         self.total_requests = 0
         self.last_arrival = 0.0
         self._moves_in_flight = 0         # pending P:D reconfigurations
+        # O(1) load signals for routers: exact mirrors of
+        # sum(i.outstanding()) and of the any-non-ACTIVE-instance test,
+        # maintained at accept/complete and on lifecycle transitions
+        self.outstanding_total = 0
+        self._non_active = 0
         # tenant classes: weighted assignment, priorities via timestamps
         self.tenants = list(self.fleet.tenants)
         w = np.array([t.weight for t in self.tenants], float)
@@ -77,8 +88,12 @@ class FleetController:
                                    + a.pd_spares,
                                    n_decode=sub.topology.n_decode
                                    + a.pd_spares)
+        inst_engine = SimEngine() if self.windowed else self.engine
         handle = build(sub, hardware=self._hardware, ops=self._ops,
-                       engine=self.engine)
+                       engine=inst_engine)
+        if self.windowed:
+            # a scale-up mid-run starts the sub-engine at the fleet clock
+            inst_engine.advance_to(self.engine.now)
         if self._engine_overhead is not None:
             for cluster in handle.clusters.values():
                 for w in cluster.replicas:
@@ -92,6 +107,8 @@ class FleetController:
                     w.active = False
         inst = Instance(name, group, handle,
                         created_at=self.engine.now, state=state)
+        if state != ACTIVE:
+            self._non_active += 1
         inst.has_spares = has_spares
         handle.controller.observer = \
             lambda r, w, inst=inst: self._on_complete(inst, r)
@@ -142,12 +159,23 @@ class FleetController:
                 t = self.tenants[int(d)]
                 r.tenant = t.name
                 r.timestamps["priority"] = float(t.priority)
-        for r in requests:
-            self.engine.at(r.arrival, EV.REQUEST_ARRIVAL,
-                           lambda ev, r=r: self._arrive(r), rid=r.rid,
-                           fleet=True)
+        arr = [r.arrival for r in requests]
+        if any(a > b for a, b in zip(arr, arr[1:])):
+            for r in requests:
+                self.engine.at(r.arrival, EV.REQUEST_ARRIVAL,
+                               lambda ev, r=r: self._arrive(r), rid=r.rid,
+                               fleet=True)
+        else:
+            # sorted arrivals ride the engine's bulk timeline (no heap
+            # traffic; seqs assigned in request order => identical ties)
+            self.engine.schedule_timeline(
+                (r.arrival, EV.REQUEST_ARRIVAL, self._arrive_ev, r)
+                for r in requests)
         if self.autoscaler is not None:
             self.autoscaler.start()
+
+    def _arrive_ev(self, ev) -> None:
+        self._arrive(ev.data)
 
     def routable_instances(self) -> List[Instance]:
         return [i for i in self.instances.values() if i.routable]
@@ -160,30 +188,88 @@ class FleetController:
         chosen = self.router.select(r, candidates, now, self.rng)
         # an instance whose entry replicas are all down (fault injection)
         # rejects; spill to the remaining instances before giving up
-        for inst in [chosen] + [i for i in candidates if i is not chosen]:
-            try:
-                inst.accept(r, now)
+        if self._accept(chosen, r, now):
+            return
+        for inst in candidates:
+            if inst is not chosen and self._accept(inst, r, now):
                 return
-            except RuntimeError:
-                continue
         raise RuntimeError("fleet: no instance has healthy entry replicas")
+
+    def _accept(self, inst: Instance, r, now: float) -> bool:
+        if self.windowed and inst.engine is not self.engine \
+                and inst.engine.now < now:
+            # conservative windows: the instance's clock is still behind
+            # this arrival, so the hand-off fires on ITS engine at the
+            # true arrival time.  Registration is eager — the router's
+            # load signals must see this request immediately, exactly as
+            # in serial mode — only the scheduling side is deferred.
+            ctrl = inst.controller
+            r.arrival = now
+            ctrl.requests[r.rid] = r
+            inst.routed += 1
+            self.outstanding_total += 1
+            inst.engine.at(now, EV.REQUEST_ARRIVAL,
+                           lambda ev, inst=inst, r=r:
+                           self._deferred_arrive(inst, r),
+                           rid=r.rid, fleet=True)
+            return True
+        try:
+            inst.accept(r, now)
+        except RuntimeError:
+            return False
+        self.outstanding_total += 1
+        return True
+
+    def _deferred_arrive(self, inst: Instance, r) -> None:
+        """Fire an eagerly-registered arrival on the instance engine; a
+        rejection (entry replicas all failed) rolls the registration back
+        and spills to the surviving instances."""
+        ctrl = inst.controller
+        prev_start = ctrl.metrics.start
+        try:
+            ctrl._arrive(r)
+        except RuntimeError:
+            del ctrl.requests[r.rid]
+            ctrl.metrics.start = prev_start
+            inst.routed -= 1
+            self.outstanding_total -= 1
+            for other in self.routable_instances():
+                if other is not inst and self._accept(other, r, r.arrival):
+                    return
+            raise RuntimeError(
+                "fleet: no instance has healthy entry replicas")
 
     # --------------------------------------------------------- completions --
     def _on_complete(self, inst: Instance, r) -> None:
         if self.autoscaler is not None:     # its attainment window is the
             self.recent_completed.append(r)  # only consumer of this list
-        inst.touch(self.engine.now)
+        # the instance's own clock: identical to self.engine.now in serial
+        # mode (one shared engine), and the *correct* completion time in
+        # windowed mode, where the fleet engine waits at a barrier
+        now = inst.engine.now
+        self.outstanding_total -= 1
+        inst.touch(now)
         if inst.state == DRAINING and inst.outstanding() == 0:
-            inst.stop(self.engine.now)
-            self._record("drained", inst)
+            inst.stop(now)
+            self._record_at("drained", inst, now)
 
     def outstanding(self) -> int:
         return sum(i.outstanding() for i in self.instances.values())
 
+    def all_active(self) -> bool:
+        """True iff every built instance is routable — the condition under
+        which ``outstanding_total`` equals the sum of ``outstanding()``
+        over exactly the router's candidate set."""
+        return self._non_active == 0
+
     # ------------------------------------------------------- scale actions --
     def _record(self, kind: str, inst: Instance, **extra) -> None:
+        self._record_at(kind, inst, self.engine.now, **extra)
+
+    def _record_at(self, kind: str, inst: Instance, t: float,
+                   **extra) -> None:
         self.scale_events.append(dict(
-            t=self.engine.now, kind=kind, instance=inst.name, **extra))
+            t=t, kind=kind, instance=inst.name, **extra))
 
     def scale_up(self, group) -> Instance:
         """Provision one more instance of ``group`` with a modeled cold
@@ -203,6 +289,7 @@ class FleetController:
 
     def _instance_ready(self, inst: Instance) -> None:
         inst.activate(self.engine.now)
+        self._non_active -= 1
         self._record("ready", inst)
         self._track_peak()
 
@@ -210,6 +297,7 @@ class FleetController:
         """Drain: stop routing to ``inst``; it finishes residents and then
         releases its GPUs (``_on_complete`` notices the drain emptying)."""
         inst.drain(self.engine.now)
+        self._non_active += 1
         self._record("scale_down", inst)
         if inst.outstanding() == 0:
             inst.stop(self.engine.now)

@@ -115,7 +115,12 @@ def run_fleet(spec, *, hardware=None, ops=None,
                          engine_overhead=engine_overhead)
     requests = spec.workload.build_requests(spec.seed)
     fc.submit_all(requests)
-    engine.run(spec.until if spec.until is not None else float("inf"))
+    until = spec.until if spec.until is not None else float("inf")
+    if fc.windowed:
+        from repro.fleet.windowed import run_windowed
+        run_windowed(fc, until, spec.fleet.window_s)
+    else:
+        engine.run(until)
     fc.finalize()
     wall = time.perf_counter() - t0
 
@@ -141,18 +146,30 @@ def run_fleet(spec, *, hardware=None, ops=None,
         "provisioned_gpu_seconds": gpu_s,
         "idle_gpu_seconds": max(gpu_s - busy_s, 0.0),
     })
+    summary["fleet_engine_mode"] = spec.fleet.engine
+    if spec.fleet.engine == "windowed":
+        summary["fleet_window_s"] = spec.fleet.window_s
     # fleet prefix-cache hit rate (the prize cache-aware routing chases)
+    # + predictor memo-cache effectiveness pooled across every replica
     hit = prompt = 0
+    cache_hits = cache_misses = 0
     transfers: Dict[str, float] = {}
     for inst in insts.values():
         for cluster in inst.handle.clusters.values():
             for w in cluster.replicas:
+                cache_hits += w.predictor.cache_hits
+                cache_misses += w.predictor.cache_misses
                 if w.memory is not None:
                     hit += w.memory.hit_tokens
                     prompt += w.memory.prompt_tokens
         ts = inst.controller.transfer_stats
         for k, v in ts.items():
             transfers[k] = transfers.get(k, 0.0) + v
+    total_lookups = cache_hits + cache_misses
+    summary["predictor_cache_hits"] = cache_hits
+    summary["predictor_cache_misses"] = cache_misses
+    summary["predictor_cache_hit_rate"] = \
+        (cache_hits / total_lookups) if total_lookups else None
     if prompt:
         summary["prefix_hit_token_frac"] = hit / prompt
     if transfers.get("transfers"):
@@ -176,7 +193,11 @@ def run_fleet(spec, *, hardware=None, ops=None,
         conservation=conservation,
         all_complete=(conservation == {"complete": len(requests)}),
         n_devices=fc.peak_devices,
-        sim_events=engine.processed,
+        # windowed mode: the fleet engine plus every distinct sub-engine
+        sim_events=sum(e.processed for e in
+                       {id(engine): engine,
+                        **{id(i.handle.engine): i.handle.engine
+                           for i in insts.values()}}.values()),
         sim_duration_s=summary.get("duration_s", 0.0),
         wall_clock_s=wall,
         created_at=datetime.now(timezone.utc).isoformat(timespec="seconds"),

@@ -24,9 +24,16 @@ import numpy as np
 
 class FleetRouter:
     """Chooses an instance for each arrival; stateful policies allowed
-    (state must be driven only by the deterministic event order)."""
+    (state must be driven only by the deterministic event order).
+
+    The FleetController sets ``self.fleet`` after construction; routers
+    may read its O(1) aggregate load signals (``outstanding_total``,
+    ``all_active()``) instead of summing per-instance state on every
+    arrival — bit-identical when every instance is routable.
+    """
 
     name = "base"
+    fleet = None                # set by FleetController.__init__
 
     def select(self, r, instances: Sequence, now: float,
                rng: np.random.Generator):
@@ -109,7 +116,13 @@ class PrefixAffinityRouter(FleetRouter):
             home = best[2] if best[0] > 0 else self._least(instances)
             self._home[pid] = home.name
             return home
-        mean = sum(i.outstanding() for i in instances) / len(instances)
+        fleet = self.fleet
+        if fleet is not None and fleet.all_active():
+            # candidates == all instances: the maintained total replaces
+            # the O(n_instances) sum (exact, not approximate)
+            mean = fleet.outstanding_total / len(instances)
+        else:
+            mean = sum(i.outstanding() for i in instances) / len(instances)
         if home.outstanding() > self.overload_factor * (mean + 1.0):
             return self._least(instances)
         return home

@@ -2,24 +2,29 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
-
 from repro.core.engine import SimEngine
 from repro.core.events import EV
 
+try:        # property tests only where hypothesis is installed (CI);
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:     # the deterministic tests below always run
+    HAVE_HYPOTHESIS = False
 
-@given(st.lists(st.floats(min_value=0.0, max_value=100.0, allow_nan=False),
-                min_size=1, max_size=200))
-@settings(max_examples=50, deadline=None)
-def test_events_processed_in_time_order(times):
-    eng = SimEngine()
-    seen = []
-    for t in times:
-        eng.at(t, EV.SCHEDULE_TICK, lambda ev: seen.append(ev.time))
-    eng.run()
-    assert seen == sorted(seen)
-    assert len(seen) == len(times)
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.floats(min_value=0.0, max_value=100.0,
+                              allow_nan=False),
+                    min_size=1, max_size=200))
+    @settings(max_examples=50, deadline=None)
+    def test_events_processed_in_time_order(times):
+        eng = SimEngine()
+        seen = []
+        for t in times:
+            eng.at(t, EV.SCHEDULE_TICK, lambda ev: seen.append(ev.time))
+        eng.run()
+        assert seen == sorted(seen)
+        assert len(seen) == len(times)
 
 
 def test_ties_break_in_schedule_order():
@@ -53,3 +58,110 @@ def test_run_until_pauses_clock():
     assert eng.pending == 1
     eng.run()
     assert eng.now == 10.0
+
+
+# ------------------------------------------------------------ event budget --
+def test_budget_raises_before_executing_over_budget_event():
+    eng = SimEngine(max_events=5)
+    ran = []
+    for i in range(7):
+        eng.at(float(i), EV.SCHEDULE_TICK, lambda ev, i=i: ran.append(i))
+    with pytest.raises(RuntimeError) as exc:
+        eng.run()
+    # the 6th event must NOT have executed — the budget check precedes
+    # the pop, so a budget blow-up never leaves a half-applied event
+    assert ran == [0, 1, 2, 3, 4]
+    assert eng.processed == 5
+    assert eng.pending == 2
+    msg = str(exc.value)
+    assert "processed=5" in msg and "pending=2" in msg and "now=" in msg
+
+
+# ---------------------------------------------------------------- timeline --
+def test_timeline_interleaves_with_heap_events():
+    eng = SimEngine()
+    seen = []
+    n = eng.schedule_timeline(
+        (float(t), EV.REQUEST_ARRIVAL, lambda ev: seen.append(("tl", ev.time)),
+         None) for t in (1, 3, 5))
+    assert n == 3
+    for t in (2, 4):
+        eng.at(float(t), EV.SCHEDULE_TICK,
+               lambda ev: seen.append(("heap", ev.time)))
+    eng.run()
+    assert seen == [("tl", 1.0), ("heap", 2.0), ("tl", 3.0),
+                    ("heap", 4.0), ("tl", 5.0)]
+    assert eng.processed == 5 and eng.pending == 0
+
+
+def test_timeline_wins_ties_against_later_heap_pushes():
+    # seqs are assigned when schedule_timeline runs, so a heap event pushed
+    # AFTERWARDS at the same timestamp must lose the tie
+    eng = SimEngine()
+    seen = []
+    eng.schedule_timeline([(1.0, EV.REQUEST_ARRIVAL,
+                            lambda ev: seen.append("tl"), None)])
+    eng.at(1.0, EV.SCHEDULE_TICK, lambda ev: seen.append("heap"))
+    eng.run()
+    assert seen == ["tl", "heap"]
+
+
+def test_timeline_rejects_unsorted_and_past_items():
+    eng = SimEngine()
+    with pytest.raises(ValueError, match="sorted"):
+        eng.schedule_timeline([(2.0, EV.REQUEST_ARRIVAL, None, None),
+                               (1.0, EV.REQUEST_ARRIVAL, None, None)])
+    eng2 = SimEngine()
+    eng2.at(1.0, EV.SCHEDULE_TICK, lambda ev: None)
+    eng2.run()
+    with pytest.raises(ValueError, match="past"):
+        eng2.schedule_timeline([(0.5, EV.REQUEST_ARRIVAL, None, None)])
+
+
+def test_timeline_payload_passes_through_event_data():
+    eng = SimEngine()
+    payload = object()
+    got = []
+    eng.schedule_timeline([(1.0, EV.REQUEST_ARRIVAL,
+                            lambda ev: got.append(ev.data), payload)])
+    eng.run()
+    assert got == [payload]
+
+
+# ---------------------------------------------------------- batch dispatch --
+def test_batch_handler_groups_contiguous_same_timestamp_runs():
+    eng = SimEngine()
+    calls = []
+    eng.register_batch_handler(
+        EV.REQUEST_ARRIVAL, lambda evs: calls.append([e.data for e in evs]))
+    eng.schedule_timeline([(1.0, EV.REQUEST_ARRIVAL, None, i)
+                           for i in range(3)])
+    # a different-kind event at the same timestamp splits the run
+    eng.at(1.0, EV.SCHEDULE_TICK, lambda ev: calls.append("tick"))
+    eng.at(1.0, EV.REQUEST_ARRIVAL, None, i=3)
+    eng.at(1.0, EV.REQUEST_ARRIVAL, None, i=4)
+    eng.run()
+    assert calls == [[0, 1, 2], "tick", [{"i": 3}, {"i": 4}]]
+    assert eng.processed == 6       # every drained event is counted
+
+
+def test_no_batch_handler_means_per_event_dispatch():
+    eng = SimEngine()
+    seen = []
+    eng.schedule_timeline([(1.0, EV.REQUEST_ARRIVAL,
+                            lambda ev: seen.append(ev.data), i)
+                           for i in range(3)])
+    eng.run()
+    assert seen == [0, 1, 2]
+
+
+# ------------------------------------------------------------- advance_to --
+def test_advance_to_moves_clock_without_dispatch():
+    eng = SimEngine()
+    eng.at(5.0, EV.SCHEDULE_TICK, lambda ev: None)
+    eng.advance_to(3.0)
+    assert eng.now == 3.0 and eng.pending == 1
+    eng.advance_to(1.0)             # never rewinds
+    assert eng.now == 3.0
+    with pytest.raises(AssertionError):
+        eng.advance_to(7.0)         # refuses to skip pending events

@@ -343,6 +343,62 @@ def test_fleet_report_byte_identical_across_runs():
     assert blob() == blob()
 
 
+# -------------------------------------------------------- windowed mode --
+def _normalized_blob(spec_dict):
+    """FleetReport JSON with the fields that legitimately differ between
+    engine modes removed: provenance (spec/spec_hash embed the mode),
+    mode-tagged summary keys, and sim_events (windowed mode fires one
+    extra hand-off event per deferred arrival)."""
+    d = run(SimSpec.from_dict(spec_dict)).to_dict()
+    for k in ("wall_clock_s", "created_at", "spec", "spec_hash",
+              "sim_events"):
+        d.pop(k, None)
+    d["summary"].pop("fleet_engine_mode", None)
+    d["summary"].pop("fleet_window_s", None)
+    return json.dumps(d, sort_keys=True, default=float)
+
+
+def test_windowed_zero_window_matches_serial_on_golden_spec():
+    import copy
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).parent))
+    from test_golden import SPECS
+    serial = copy.deepcopy(SPECS["fleet_pd"])
+    windowed = copy.deepcopy(SPECS["fleet_pd"])
+    windowed["fleet"] = dict(windowed["fleet"], engine="windowed",
+                             window_s=0.0)
+    assert _normalized_blob(serial) == _normalized_blob(windowed)
+
+
+def test_windowed_nonzero_window_is_deterministic_and_complete():
+    import copy
+    spec = _fleet_spec(
+        n_requests=80, router="prefix_affinity",
+        instances=[{"name": "colo", "count": 3}],
+        autoscaler={"max_instances": 5, "interval_s": 0.5,
+                    "up_queue_depth": 4.0}).to_dict()
+    spec["fleet"] = dict(spec["fleet"], engine="windowed", window_s=0.2)
+    a = _normalized_blob(copy.deepcopy(spec))
+    b = _normalized_blob(copy.deepcopy(spec))
+    assert a == b                        # deterministic given the window
+    rep = run(SimSpec.from_dict(spec))
+    assert rep.all_complete
+    assert rep.summary["fleet_engine_mode"] == "windowed"
+    assert rep.summary["fleet_window_s"] == 0.2
+
+
+def test_fleet_engine_spec_validation():
+    spec = _fleet_spec().to_dict()
+    spec["fleet"]["engine"] = "threads"
+    with pytest.raises(SpecError, match="engine"):
+        SimSpec.from_dict(spec).validate()
+    spec["fleet"]["engine"] = "windowed"
+    spec["fleet"]["window_s"] = -1.0
+    with pytest.raises(SpecError, match="window_s"):
+        SimSpec.from_dict(spec).validate()
+
+
 # ------------------------------------------------- conservation property --
 def _check_conservation(preset, router, counts, n_requests, fault_at, seed):
     """Shared body: every arrived request ends complete on exactly one

@@ -1,0 +1,174 @@
+"""Vectorized predictor backend: batch/scalar equivalence, the jit cost
+kernel, memo-cache accounting, and backend spec plumbing."""
+import numpy as np
+import pytest
+
+from repro.api.spec import OpModelSpec, SpecError
+from repro.configs import get_config
+from repro.core.hardware import H100_SXM, ParallelismConfig
+from repro.core.opmodels.analytical import AnalyticalModels
+from repro.core.opmodels.batch import batch_step_totals, supports_vectorized
+from repro.core.predictor import ExecutionPredictor
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _pred(name="qwen3-8b", tp=1, pp=1, backend="python", **kw):
+    cfg = get_config(name, smoke=True)
+    return ExecutionPredictor(cfg, ParallelismConfig(tp=tp, pp=pp),
+                              H100_SXM, AnalyticalModels(H100_SXM),
+                              backend=backend, **kw)
+
+
+def _grid(rng, n_steps=30):
+    steps = []
+    for _ in range(n_steps):
+        n = int(rng.integers(1, 10))
+        q = [int(rng.integers(1, 700)) for _ in range(n)]
+        kv = [qi + int(rng.integers(0, 1500)) for qi in q]
+        steps.append((q, kv))
+    steps.append(([], []))          # zero-token step prices to 0.0
+    steps.append(([9], [9]))        # q == kv triggers the causal 0.5
+    return steps
+
+
+def _assert_matches(pred, steps, decode, backend, tol):
+    ref = np.array([pred._step_time_impl(list(q), list(kv),
+                                         decode=decode).total
+                    for q, kv in steps])
+    got = pred.step_time_batch(steps, decode=decode, backend=backend)
+    rel = np.abs(got - ref) / np.maximum(np.abs(ref), 1e-30)
+    rel[ref == 0] = np.abs(got[ref == 0])
+    assert rel.max() <= tol, (backend, float(rel.max()))
+
+
+# ------------------------------------------------------ batch == scalar --
+@pytest.mark.parametrize("name,tp,pp", [
+    ("qwen3-8b", 1, 1), ("qwen3-8b", 4, 2), ("gemma2-27b", 2, 1),
+    ("rwkv6-1.6b", 1, 1), ("recurrentgemma-2b", 1, 2), ("yi-9b", 8, 4),
+])
+@pytest.mark.parametrize("decode", [False, True])
+def test_numpy_batch_matches_scalar_grid(name, tp, pp, decode):
+    pred = _pred(name, tp, pp, memoize=False)
+    assert supports_vectorized(pred)
+    steps = _grid(np.random.default_rng(hash((name, tp, pp)) % 2**32))
+    if decode:
+        steps = [([1] * len(q), kv) for q, kv in steps]
+    _assert_matches(pred, steps, decode, "numpy", 1e-9)
+
+
+def test_jit_batch_matches_scalar_loosely():
+    pytest.importorskip("jax")
+    pred = _pred(memoize=False)
+    steps = _grid(np.random.default_rng(7), n_steps=12)
+    # float32 kernel: ~1e-7 relative, far looser than the float64 path
+    _assert_matches(pred, steps, False, "jit", 1e-5)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(
+        st.lists(st.tuples(st.integers(1, 2000), st.integers(0, 4000)),
+                 min_size=1, max_size=8),
+        min_size=1, max_size=12),
+        st.booleans())
+    @settings(max_examples=40, deadline=None)
+    def test_batch_matches_scalar_property(shape_grid, decode):
+        pred = _pred(memoize=False)
+        steps = [([q for q, _ in reqs], [q + e for q, e in reqs])
+                 for reqs in shape_grid]
+        if decode:
+            steps = [([1] * len(q), kv) for q, kv in steps]
+        _assert_matches(pred, steps, decode, "numpy", 1e-9)
+
+
+# ----------------------------------------------------------- fallbacks --
+def test_moe_falls_back_to_exact_python_walk():
+    pred = _pred("mixtral-8x7b", tp=2, backend="numpy", memoize=False)
+    assert not supports_vectorized(pred)     # RNG-driven expert routing
+    steps = [([3, 4], [10, 12]), ([1, 1], [50, 60])]
+    ref_pred = _pred("mixtral-8x7b", tp=2, memoize=False)
+    ref = np.array([ref_pred._step_time_impl(list(q), list(kv),
+                                             decode=True).total
+                    for q, kv in steps])
+    got = pred.step_time_batch(steps, decode=True)
+    np.testing.assert_array_equal(got, ref)  # same RNG draw order
+
+
+def test_overridden_ops_disable_vectorization():
+    class TweakedOps(AnalyticalModels):
+        def gemm(self, m, n, k, dtype_bytes=2):
+            return super().gemm(m, n, k, dtype_bytes) * 1.5
+
+    cfg = get_config("qwen3-8b", smoke=True)
+    pred = ExecutionPredictor(cfg, ParallelismConfig(), H100_SXM,
+                              TweakedOps(H100_SXM), memoize=False)
+    assert not supports_vectorized(pred)
+
+
+def test_numpy_backend_prices_cache_misses_identically():
+    a = _pred(backend="numpy")
+    b = _pred(backend="python")
+    qa = a.step_time([7, 9], [100, 200], decode=False).total
+    qb = b.step_time([7, 9], [100, 200], decode=False).total
+    assert qa == pytest.approx(qb, rel=1e-9)
+    assert (a.cache_hits, a.cache_misses) == (0, 1)
+
+
+def test_empty_batch():
+    pred = _pred(memoize=False)
+    assert batch_step_totals(pred, [], decode=True).shape == (0,)
+
+
+# --------------------------------------------------- memo-cache metrics --
+def test_cache_hit_miss_counters_and_lru_eviction():
+    pred = _pred(cache_size=2)
+    shapes = [([10], [10]), ([500], [500]), ([10000], [10000])]
+    for q, kv in shapes:                     # 3 distinct buckets, cap 2
+        pred.step_time(q, kv, decode=False)
+    assert (pred.cache_hits, pred.cache_misses) == (0, 3)
+    assert len(pred._cache) == 2             # LRU evicted the oldest
+    pred.step_time(*shapes[2], decode=False)     # most-recent: hit
+    assert pred.cache_hits == 1
+    pred.step_time(*shapes[0], decode=False)     # evicted: miss again
+    assert pred.cache_misses == 4
+    assert len(pred._cache) == 2
+
+
+def test_report_surfaces_predictor_cache_stats():
+    from repro.api import SimSpec, run
+    rep = run(SimSpec.from_dict({
+        "model": {"name": "qwen2-7b", "smoke": True},
+        "topology": {"preset": "colocated", "n_replicas": 1},
+        "workload": {"n_requests": 10, "rate": 50.0},
+    }))
+    s = rep.summary
+    assert s["predictor_cache_hits"] + s["predictor_cache_misses"] > 0
+    assert s["predictor_cache_hit_rate"] == pytest.approx(
+        s["predictor_cache_hits"]
+        / (s["predictor_cache_hits"] + s["predictor_cache_misses"]))
+
+
+# ------------------------------------------------------- spec plumbing --
+def test_opmodel_backend_validation():
+    OpModelSpec(backend="jit").validate()
+    with pytest.raises(SpecError, match="backend"):
+        OpModelSpec(backend="fortran").validate()
+    with pytest.raises(ValueError, match="backend"):
+        _pred(backend="fortran")
+
+
+def test_backend_threads_through_build():
+    from repro.api import SimSpec
+    from repro.api.run import build
+    handle = build(SimSpec.from_dict({
+        "model": {"name": "qwen2-7b", "smoke": True},
+        "topology": {"preset": "colocated", "n_replicas": 2},
+        "opmodel": {"backend": "numpy"},
+    }))
+    for cluster in handle.clusters.values():
+        for w in cluster.replicas:
+            assert w.predictor.backend == "numpy"
