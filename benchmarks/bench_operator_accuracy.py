@@ -1,106 +1,87 @@
 """Paper Fig. 2: CDF of relative error in simulated operator runtime.
 
-Frontier's RF models vs the Vidur sqrt-proxy vs the analytical roofline,
-evaluated on held-out heterogeneous batches against the virtual-kernel
-ground truth (A800 profile, the paper's hardware).
+Frontier's fitted RF models vs the Vidur sqrt-proxy vs the analytical
+roofline, on held-out heterogeneous batches — driven by the calibration
+subsystem (``repro.calib.calibrate``), so the bench measures exactly the
+models ``run(spec)`` would price steps with.
+
+    PYTHONPATH=src python benchmarks/bench_operator_accuracy.py \
+        --json bench_accuracy.json
+
+``--json`` emits the same shape as ``bench_sim_scale.py --json`` (a
+``smoke`` flag + per-cell dicts), one cell per operator.
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
 
-import numpy as np
+from repro.calib import calibrate
 
-from repro.core.hardware import A800_SXM4_80G
-from repro.core.opmodels.analytical import OperatorModelSet
-from repro.core.opmodels.calibration import (
-    fit_attention_model, fit_grouped_gemm_model, sample_attention_batch,
-    sample_grouped_gemm,
-)
-from repro.core.opmodels.kernelsim import VirtualKernels
-from repro.core.opmodels.vidur_proxy import VidurProxyModel
-
-# qwen2-7b operator geometry (the paper's eval model)
-H, K, HD = 28, 4, 128
-E, TOPK, D_IN, D_OUT = 64, 8, 3584, 2560
+# attention comes from the paper's eval model (qwen2-7b); mixtral supplies
+# the MoE expert dims for the GroupedGEMM cell
+ATTENTION_MODEL = "qwen2-7b"
+MOE_MODEL = "mixtral-8x7b"
 
 
-def _cdf_stats(err: np.ndarray) -> Dict[str, float]:
-    return {
-        "mean": float(err.mean()),
-        "p50": float(np.percentile(err, 50)),
-        "p90": float(np.percentile(err, 90)),
-        "p99": float(np.percentile(err, 99)),
-        "frac_lt_6pct": float(np.mean(err < 0.06)),
-        "frac_lt_10pct": float(np.mean(err < 0.10)),
-    }
-
-
-def run(n_fit: int = 900, n_eval: int = 150, seed: int = 0) -> List[str]:
-    hw = A800_SXM4_80G
-    vk = VirtualKernels(hw)
-    analytical = OperatorModelSet(hw)
-    proxy = VidurProxyModel(vk)
-    lines = []
-
-    def attn_oracle(q, kv, h, k, hd, causal, window):
-        if any(x > 1 for x in q):
-            return vk.attention_prefill(q, kv, h, k, hd, causal=causal,
-                                        window=window)
-        return vk.attention_decode(kv, h, k, hd, window=window)
-
-    t0 = time.perf_counter()
-    rf, _ = fit_attention_model(attn_oracle, n_heads=H, n_kv_heads=K,
-                                head_dim=HD, n_samples=n_fit, seed=seed)
-    fit_us = (time.perf_counter() - t0) * 1e6
-
-    rng = np.random.default_rng(seed + 1)
-    errs = {"frontier_rf": [], "vidur_proxy": [], "analytical": []}
-    for _ in range(n_eval):
-        decode = rng.random() < 0.5
-        q, kv = sample_attention_batch(rng, decode=decode)
-        t = attn_oracle(q, kv, H, K, HD, not decode, 0)
-        preds = {
-            "frontier_rf": rf.predict(q, kv, causal=not decode, window=0),
-            "vidur_proxy": (proxy.attention_decode(kv, H, K, HD) if decode
-                            else proxy.attention_prefill(q, kv, H, K, HD)),
-            "analytical": (analytical.attention_decode(kv, H, K, HD) if decode
-                           else analytical.attention_prefill(q, kv, H, K, HD)),
+def run_bench(n_train: int = 900, n_eval: int = 150, seed: int = 0,
+              oracle: str = "kernelsim", smoke: bool = False,
+              ) -> Tuple[List[str], Dict]:
+    results: Dict = {"smoke": smoke, "oracle": oracle, "n_train": n_train,
+                     "n_eval": n_eval}
+    lines: List[str] = []
+    # one calibration per source model; no artifacts written (bench mode)
+    for model, op in ((ATTENTION_MODEL, "attention"),
+                      (MOE_MODEL, "grouped_gemm")):
+        res = calibrate(model=model, oracle=oracle, smoke=smoke,
+                        n_train=n_train, n_eval=n_eval, seed=seed,
+                        out_root=None)
+        fams = res.fidelity[op]
+        results[op] = {
+            "model": res.model, "hardware": res.hardware,
+            "oracle": res.oracle, "n_train": n_train, "n_eval": n_eval,
+            "wall_s": round(res.wall_s, 3),
+            "families": {f: {k: round(v, 6) for k, v in s.items()}
+                         for f, s in fams.items()},
         }
-        for name, p in preds.items():
-            errs[name].append(abs(p - t) / max(t, 1e-12))
+        for fam in ("fitted", "analytical", "vidur_proxy"):
+            s = fams[fam]
+            lines.append(
+                f"fig2_{op}_{fam},mape={s['mape']:.4f};p50={s['p50']:.4f};"
+                f"p99={s['p99']:.4f}")
+    return lines, results
 
-    for name, e in errs.items():
-        s = _cdf_stats(np.asarray(e))
-        lines.append(
-            f"fig2_attention_{name},{fit_us if name=='frontier_rf' else 0:.0f},"
-            f"mean_rel_err={s['mean']:.4f};p50={s['p50']:.4f};p90={s['p90']:.4f};"
-            f"frac_lt_10pct={s['frac_lt_10pct']:.3f}")
 
-    # GroupedGEMM (Vidur: unsupported -> homogenized fallback shown for scale)
-    t0 = time.perf_counter()
-    gg, _ = fit_grouped_gemm_model(lambda c, di, do: vk.grouped_gemm(c, di, do),
-                                   n_experts=E, top_k=TOPK, d_in=D_IN,
-                                   d_out=D_OUT, n_samples=n_fit // 2, seed=seed)
-    gg_fit_us = (time.perf_counter() - t0) * 1e6
-    gerrs = {"frontier_rf": [], "vidur_homog": [], "analytical": []}
-    for _ in range(n_eval):
-        c = sample_grouped_gemm(rng, n_experts=E, top_k=TOPK, d_in=D_IN,
-                                d_out=D_OUT)
-        t = vk.grouped_gemm(c, D_IN, D_OUT)
-        gerrs["frontier_rf"].append(abs(gg.predict(c) - t) / t)
-        gerrs["vidur_homog"].append(
-            abs(proxy.grouped_gemm(c, D_IN, D_OUT) - t) / t)
-        gerrs["analytical"].append(
-            abs(analytical.grouped_gemm(c, D_IN, D_OUT) - t) / t)
-    for name, e in gerrs.items():
-        s = _cdf_stats(np.asarray(e))
-        lines.append(
-            f"fig2_groupedgemm_{name},{gg_fit_us if name=='frontier_rf' else 0:.0f},"
-            f"mean_rel_err={s['mean']:.4f};frac_lt_6pct={s['frac_lt_6pct']:.3f}")
-    return lines
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results (bench_sim_scale "
+                         "shape) to PATH")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced model geometry + grid for CI")
+    ap.add_argument("--oracle", default="kernelsim",
+                    help="ground-truth backend (default kernelsim)")
+    ap.add_argument("--n-train", type=int, default=None)
+    ap.add_argument("--n-eval", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    n_train = args.n_train or (160 if args.smoke else 900)
+    n_eval = args.n_eval or (60 if args.smoke else 150)
+    lines, results = run_bench(n_train=n_train, n_eval=n_eval,
+                               seed=args.seed, oracle=args.oracle,
+                               smoke=args.smoke)
+    for line in lines:
+        print(line)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"results -> {args.json}")
+    return 0
 
 
 if __name__ == "__main__":
-    for l in run():
-        print(l)
+    sys.exit(main())

@@ -1,17 +1,22 @@
-"""Bench-regression gate: fail CI when fleet events/s regresses.
+"""Bench-regression gate: fail CI when fleet events/s OR simulator
+fidelity regresses.
 
-Compares a fresh ``bench_sim_scale.py --json`` result file against the
-last entry of the checked-in trajectory (repo-root
-``BENCH_sim_scale.json``) and exits non-zero if the watched cell's
-``events_per_s`` dropped more than ``--tolerance`` (default 20%) below
-the baseline.
+Two gate modes, combinable:
 
-Baseline selection prefers the most recent trajectory entry whose cell
-was measured under a comparable configuration (same smoke flag,
-n_requests, instance count, and engine mode); if none matches it falls
-back to the most recent entry that has the cell at all and says so —
-events/s is a rate, so cross-scale comparison is meaningful, just
-noisier.
+- perf (``--results``): compares a fresh ``bench_sim_scale.py --json``
+  result file against the last entry of the checked-in trajectory
+  (repo-root ``BENCH_sim_scale.json``) and exits non-zero if the watched
+  cell's ``events_per_s`` dropped more than ``--tolerance`` (default
+  20%) below the baseline.
+- fidelity (``--fidelity-results``): compares a fresh calibration entry
+  (``python -m repro calibrate --entry-out``) against the checked-in
+  ``FIDELITY.json`` trajectory and fails if any operator's fitted MAPE
+  grew more than ``--fidelity-tolerance`` (default 20%, relative).
+
+Baseline selection prefers the most recent trajectory entry measured
+under a comparable configuration; if none matches it falls back to the
+most recent entry at all and says so — cross-config comparison is
+meaningful, just noisier.
 """
 from __future__ import annotations
 
@@ -43,9 +48,24 @@ def pick_baseline(trajectory: list, cell: str, fresh_cfg: dict):
     return with_cell[-1], False
 
 
+def check_fidelity(results_path: str, trajectory_path: str,
+                   tolerance: float) -> int:
+    from repro.calib.fidelity import (
+        check_fidelity_regression, load_trajectory,
+    )
+    with open(results_path) as f:
+        fresh = json.load(f)
+    ok, lines = check_fidelity_regression(fresh,
+                                          load_trajectory(trajectory_path),
+                                          tolerance=tolerance)
+    for line in lines:
+        print(line)
+    return 0 if ok else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--results", required=True,
+    ap.add_argument("--results", default=None,
                     help="fresh bench_sim_scale.py --json output")
     ap.add_argument("--trajectory", default="BENCH_sim_scale.json",
                     help="checked-in cross-PR trajectory file")
@@ -53,7 +73,24 @@ def main(argv=None) -> int:
                     help="which result cell to gate on")
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="max allowed fractional drop in events_per_s")
+    ap.add_argument("--fidelity-results", default=None,
+                    help="fresh fidelity entry (repro calibrate "
+                         "--entry-out output)")
+    ap.add_argument("--fidelity-trajectory", default="FIDELITY.json",
+                    help="checked-in fidelity trajectory file")
+    ap.add_argument("--fidelity-tolerance", type=float, default=0.2,
+                    help="max allowed relative fitted-MAPE increase")
     args = ap.parse_args(argv)
+
+    if args.results is None and args.fidelity_results is None:
+        ap.error("need --results and/or --fidelity-results")
+    rc = 0
+    if args.fidelity_results is not None:
+        rc |= check_fidelity(args.fidelity_results,
+                             args.fidelity_trajectory,
+                             args.fidelity_tolerance)
+    if args.results is None:
+        return rc
 
     with open(args.results) as f:
         fresh = json.load(f)
@@ -70,7 +107,7 @@ def main(argv=None) -> int:
     if base is None:
         print(f"gate: no trajectory entry has cell '{args.cell}' — "
               f"pass (nothing to compare against)")
-        return 0
+        return rc
 
     base_eps = base[args.cell]["events_per_s"]
     fresh_eps = cell["events_per_s"]
@@ -87,7 +124,7 @@ def main(argv=None) -> int:
               f"(> {args.tolerance:.0%} allowed)")
         return 1
     print("gate: OK")
-    return 0
+    return rc
 
 
 if __name__ == "__main__":

@@ -136,7 +136,45 @@ def _cmd_sweep(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_calibrate(args: argparse.Namespace) -> int:
+    from repro.calib import (
+        CalibrationError, append_fidelity, calibrate, entry_from_result,
+    )
+    try:
+        result = calibrate(
+            model=args.model, hardware=args.hardware, oracle=args.oracle,
+            smoke=args.smoke, n_train=args.train_samples,
+            n_eval=args.eval_samples, seed=args.seed,
+            max_len=args.max_len, max_batch=args.max_batch,
+            out_root=args.out)
+    except (CalibrationError, KeyError) as e:
+        print(f"calibrate error: {e}", file=sys.stderr)
+        return 2
+    print(f"calibrated {result.model} on {result.hardware} "
+          f"(oracle={result.oracle}, n_train={result.n_train}, "
+          f"n_eval={result.n_eval}, wall={result.wall_s:.1f}s)")
+    for op, fams in result.fidelity.items():
+        print(f"  {op}:")
+        for fam in ("fitted", "analytical", "vidur_proxy"):
+            s = fams[fam]
+            print(f"    {fam:12s} mape={s['mape']:8.3%}  "
+                  f"p50={s['p50']:8.3%}  p99={s['p99']:8.3%}")
+    for op, path in result.artifact_paths.items():
+        print(f"  artifact -> {path}")
+    entry = entry_from_result(result, args.label)
+    if args.entry_out:
+        with open(args.entry_out, "w") as f:
+            json.dump(entry, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"  fidelity entry -> {args.entry_out}")
+    if args.fidelity:
+        append_fidelity(args.fidelity, entry)
+        print(f"  fidelity trajectory -> {args.fidelity}")
+    return 0
+
+
 def _cmd_list(args: argparse.Namespace) -> int:
+    from repro.calib import ORACLES, discover_artifacts
     from repro.configs import REGISTRY
     from repro.core.hardware import HARDWARE
     from repro.core.opmodels import OPMODELS
@@ -148,6 +186,12 @@ def _cmd_list(args: argparse.Namespace) -> int:
     from repro.fleet.router import FLEET_ROUTERS
     from repro.api.spec import ARRIVALS, PRESETS
     from repro.workload.generator import RATE_CURVES
+    arts = [
+        f"{a['hardware']}/{a['operator']} (model={a['model']} "
+        f"oracle={a['oracle']}"
+        + (f" mape={a['mape']:.2%}" if a.get("mape") is not None else "")
+        + ")"
+        for a in discover_artifacts()]
     sections = {
         "models": sorted(REGISTRY),
         "hardware": sorted(HARDWARE),
@@ -160,6 +204,8 @@ def _cmd_list(args: argparse.Namespace) -> int:
         "queue policies": sorted(SCHEDULERS),
         "memory managers": sorted(MEMORY),
         "operator models": sorted(OPMODELS),
+        "oracle backends": sorted(ORACLES) + ["auto"],
+        "calibration artifacts (artifacts/calib)": arts or ["(none found)"],
         "pipeline presets": sorted(PIPELINES),
     }
     want = getattr(args, "what", None)
@@ -207,6 +253,46 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                    help="explicit JSONL output path")
     p.add_argument("--set", action="append", metavar="PATH=VALUE")
     p.set_defaults(fn=_cmd_sweep)
+
+    p = sub.add_parser(
+        "calibrate",
+        help="fit operator models against an oracle, write artifacts + "
+             "FIDELITY.json")
+    p.add_argument("--model", default="qwen2-7b",
+                   help="model config whose operator geometry to fit "
+                        "(default qwen2-7b)")
+    p.add_argument("--smoke", action="store_true",
+                   help="fit the reduced smoke geometry (matches specs "
+                        "with model.smoke: true)")
+    p.add_argument("--hardware", default="A800-SXM4-80G",
+                   help="hardware preset to calibrate for")
+    p.add_argument("--oracle", default="auto",
+                   help="ground-truth backend: kernelsim | pallas | hlo | "
+                        "auto (pallas on accelerators, else kernelsim)")
+    p.add_argument("--train-samples", type=int, default=600,
+                   help="training grid size (default 600)")
+    p.add_argument("--eval-samples", type=int, default=150,
+                   help="held-out eval grid size (default 150)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--max-len", type=int, default=None,
+                   help="cap sampled sequence lengths (default: oracle "
+                        "limit)")
+    p.add_argument("--max-batch", type=int, default=None,
+                   help="cap sampled batch sizes (default: oracle limit)")
+    p.add_argument("-o", "--out", default=os.path.join("artifacts", "calib"),
+                   help="artifact root (default artifacts/calib/); "
+                        "artifacts land under <out>/<hardware>/")
+    p.add_argument("--fidelity", default="FIDELITY.json",
+                   help="fidelity trajectory to append to "
+                        "(default FIDELITY.json)")
+    p.add_argument("--no-fidelity", dest="fidelity", action="store_const",
+                   const=None, help="do not touch the trajectory file")
+    p.add_argument("--label", default="dev",
+                   help="trajectory entry label (entries dedupe by label)")
+    p.add_argument("--entry-out", default=None,
+                   help="also write the fresh fidelity entry to this path "
+                        "(CI gating input)")
+    p.set_defaults(fn=_cmd_calibrate)
 
     p = sub.add_parser("list", help="show registries a spec can reference")
     p.add_argument("what", nargs="?", default=None,

@@ -95,7 +95,14 @@ def build(spec: SimSpec, *,
     hw = hardware if hardware is not None \
         else _resolve_hw(topo.hardware, "topology.hardware")
     if ops is None:
-        ops = resolve_opmodels(spec.opmodel.name, hw)
+        if spec.opmodel.calibration is not None:
+            from repro.calib import CalibrationError, load_calibrated_ops
+            try:
+                ops = load_calibrated_ops(spec.opmodel.calibration, cfg, hw)
+            except CalibrationError as e:
+                raise SpecError(f"opmodel.calibration: {e}") from e
+        else:
+            ops = resolve_opmodels(spec.opmodel.name, hw)
     pol = spec.policy
     pipeline = spec.pipeline.to_config() if spec.pipeline is not None \
         else None

@@ -578,9 +578,16 @@ class OpModelSpec:
     ``jax.jit`` (float32 — totals match python to ~1e-9 relative, not
     bitwise).  Models the kernel can't reproduce (MoE routing draws,
     refined operator models) silently fall back to python.
+
+    ``calibration`` points at a directory of fitted artifacts produced by
+    ``python -m repro calibrate`` (the calib root or a ``<hardware>/``
+    subdirectory); steps are then priced by the fitted forest models.
+    Requires ``name: refined`` — the fitted models slot into the refined
+    model set, with virtual kernels as the out-of-domain fallback.
     """
     name: str = "analytical"
     backend: str = "python"
+    calibration: Optional[str] = None
 
     def validate(self) -> None:
         if self.name not in OPMODELS:
@@ -590,6 +597,16 @@ class OpModelSpec:
             raise SpecError(f"opmodel.backend: unknown predictor backend "
                             f"{self.backend!r}; available: "
                             f"{list(PREDICTOR_BACKENDS)}")
+        if self.calibration is not None:
+            if not isinstance(self.calibration, str) or not self.calibration:
+                raise SpecError("opmodel.calibration: expected a path to a "
+                                "calibration artifact directory (see "
+                                "`python -m repro calibrate`)")
+            if self.name != "refined":
+                raise SpecError(
+                    f"opmodel.calibration: fitted artifacts load into the "
+                    f"refined model set; set opmodel.name: refined "
+                    f"(got {self.name!r})")
 
 
 @dataclass
@@ -954,7 +971,12 @@ class SimSpec:
 
     # ------------------------------------------------------ serialization --
     def to_dict(self) -> Dict[str, Any]:
-        return asdict(self)
+        d = asdict(self)
+        # an unset calibration must hash/serialize exactly like specs that
+        # predate the field, so spec hashes and goldens stay bit-identical
+        if d.get("opmodel", {}).get("calibration") is None:
+            d["opmodel"].pop("calibration", None)
+        return d
 
     @classmethod
     def from_dict(cls, data: Mapping[str, Any]) -> "SimSpec":

@@ -1,0 +1,40 @@
+"""Calibration & fidelity: close the sim-to-real loop.
+
+Measure per-operator latency against an oracle (real Pallas kernels,
+virtual-kernel simulator, or HLO-cost proxy), fit the refined forest
+models, persist them as versioned artifacts, load them into ``run(spec)``
+via ``OpModelSpec.calibration``, and track simulator-vs-oracle error as a
+CI-gated trajectory (repo-root ``FIDELITY.json``).
+
+    python -m repro calibrate --oracle kernelsim --model qwen2-7b
+"""
+from repro.calib.artifacts import (
+    ARTIFACT_VERSION, CalibrationArtifact, CalibrationError, artifact_path,
+    discover_artifacts, load_artifact, load_calibrated_ops, save_artifact,
+)
+from repro.calib.fidelity import (
+    append_fidelity, check_fidelity_regression, entry_from_result,
+    load_trajectory,
+)
+from repro.calib.fit import CalibrationResult, calibrate
+from repro.calib.grid import (
+    AttentionSample, CalibGrid, GroupedGemmSample, attention_grid,
+    build_grid, geometry_of, grouped_gemm_grid, moe_geometry_of,
+)
+from repro.calib.oracle import (
+    ORACLES, HLOCostOracle, KernelSimOracle, Oracle, PallasOracle,
+    default_oracle_name, resolve_oracle,
+)
+
+__all__ = [
+    "ARTIFACT_VERSION", "AttentionSample", "CalibGrid",
+    "CalibrationArtifact", "CalibrationError", "CalibrationResult",
+    "GroupedGemmSample", "HLOCostOracle", "KernelSimOracle", "ORACLES",
+    "Oracle", "PallasOracle", "append_fidelity", "artifact_path",
+    "attention_grid", "build_grid", "calibrate",
+    "check_fidelity_regression", "default_oracle_name",
+    "discover_artifacts", "entry_from_result", "geometry_of",
+    "grouped_gemm_grid", "load_artifact", "load_calibrated_ops",
+    "load_trajectory", "moe_geometry_of", "resolve_oracle",
+    "save_artifact",
+]

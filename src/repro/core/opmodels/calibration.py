@@ -24,8 +24,9 @@ from repro.core.opmodels.kernelsim import VirtualKernels
 # break proxy models)
 # ---------------------------------------------------------------------------
 def sample_attention_batch(rng: np.random.Generator, *, decode: bool,
-                           max_len: int = 8192) -> Tuple[List[int], List[int]]:
-    b = int(rng.integers(1, 129))
+                           max_len: int = 8192, max_batch: int = 128,
+                           ) -> Tuple[List[int], List[int]]:
+    b = int(rng.integers(1, max_batch + 1))
     regime = rng.choice(["uniform", "lognormal", "skewed", "bimodal"])
     if regime == "uniform":
         lens = rng.integers(16, max_len, b)
@@ -38,16 +39,18 @@ def sample_attention_batch(rng: np.random.Generator, *, decode: bool,
     else:  # skewed: one giant + many small (the paper's 72-request example)
         lens = rng.integers(16, 128, b)
         lens[0] = int(rng.integers(max_len // 2, max_len))
-    lens = [int(x) for x in lens]
+    # clamp covers the skewed regime's fixed 16..128 draws when an oracle
+    # caps max_len below 128 (CPU interpret-mode Pallas timing)
+    lens = [min(int(x), max_len) for x in lens]
     if decode:
         return [1] * b, lens
     return lens, lens
 
 
 def sample_grouped_gemm(rng: np.random.Generator, *, n_experts: int,
-                        top_k: int, d_in: int, d_out: int
-                        ) -> List[int]:
-    toks = int(rng.integers(64, 16384))
+                        top_k: int, d_in: int, d_out: int,
+                        max_tokens: int = 16384) -> List[int]:
+    toks = int(rng.integers(min(64, max_tokens), max_tokens))
     alpha = float(rng.uniform(0.0, 2.0))
     ranks = np.arange(1, n_experts + 1, dtype=np.float64)
     p = ranks ** -alpha

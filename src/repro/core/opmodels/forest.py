@@ -116,3 +116,39 @@ class RandomForest:
         if X.ndim == 1:
             X = X[None, :]
         return np.mean([t.predict(X) for t in self.trees], axis=0)
+
+    # ------------------------------------------------------- serialization --
+    # JSON-portable dict form: hyperparameters + flat per-tree node arrays.
+    # float64 round-trips exactly through repr-based json encoding, so a
+    # from_dict(to_dict(f)) forest predicts bit-identically.
+    def to_dict(self) -> dict:
+        return {
+            "n_trees": self.n_trees,
+            "max_depth": self.max_depth,
+            "min_leaf": self.min_leaf,
+            "max_features": self.max_features,
+            "seed": self.seed,
+            "trees": [{
+                "feature": t.feature.tolist(),
+                "threshold": t.threshold.tolist(),
+                "left": t.left.tolist(),
+                "right": t.right.tolist(),
+                "value": t.value.tolist(),
+            } for t in self.trees],
+        }
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "RandomForest":
+        forest = cls(n_trees=int(data["n_trees"]),
+                     max_depth=int(data["max_depth"]),
+                     min_leaf=int(data["min_leaf"]),
+                     max_features=data.get("max_features"),
+                     seed=int(data.get("seed", 0)))
+        forest.trees = [
+            _Tree(feature=np.asarray(t["feature"], np.int64),
+                  threshold=np.asarray(t["threshold"], np.float64),
+                  left=np.asarray(t["left"], np.int64),
+                  right=np.asarray(t["right"], np.int64),
+                  value=np.asarray(t["value"], np.float64))
+            for t in data["trees"]]
+        return forest

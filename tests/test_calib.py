@@ -1,0 +1,327 @@
+"""Calibration & fidelity subsystem: oracles, fitting, artifacts, loading
+into run(spec), and the FIDELITY trajectory gate."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import ModelRef, SimSpec, TopologySpec, WorkloadSpec, run
+from repro.api.spec import OpModelSpec, SpecError
+from repro.calib import (
+    CalibrationArtifact, CalibrationError, HLOCostOracle, KernelSimOracle,
+    ORACLES, append_fidelity, calibrate, check_fidelity_regression,
+    default_oracle_name, discover_artifacts, entry_from_result,
+    load_artifact, load_calibrated_ops, load_trajectory, resolve_oracle,
+)
+from repro.calib.grid import build_grid
+from repro.configs import get_config
+from repro.core.hardware import HARDWARE
+from repro.core.opmodels.forest import RandomForest
+from repro.core.opmodels.kernelsim import VirtualKernels
+
+HW = HARDWARE["A800-SXM4-80G"]
+CAL_KW = dict(oracle="kernelsim", smoke=True, n_train=160, n_eval=60,
+              max_len=1024, max_batch=32)
+
+
+@pytest.fixture(scope="module")
+def qwen_artifacts(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("calib_qwen"))
+    result = calibrate(model="qwen2-7b", out_root=root, **CAL_KW)
+    return root, result
+
+
+@pytest.fixture(scope="module")
+def mixtral_artifacts(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("calib_mixtral"))
+    result = calibrate(model="mixtral-8x7b", out_root=root, **CAL_KW)
+    return root, result
+
+
+def _spec(calibration=None, **kw):
+    opmodel = OpModelSpec(name="refined", calibration=calibration) \
+        if calibration else OpModelSpec()
+    base = dict(
+        model=ModelRef("qwen2-7b", smoke=True),
+        topology=TopologySpec(preset="colocated", n_replicas=1, tp=1),
+        workload=WorkloadSpec(n_requests=12, rate=20.0, prompt_mean=96,
+                              output_mean=12),
+        opmodel=opmodel, seed=0)
+    base.update(kw)
+    return SimSpec(**base)
+
+
+# ------------------------------------------------------------------ forest --
+def test_forest_json_roundtrip_exact():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(80, 6))
+    y = rng.normal(size=80)
+    f = RandomForest(n_trees=8, seed=3).fit(X, y)
+    clone = RandomForest.from_dict(
+        json.loads(json.dumps(f.to_dict())))
+    Xq = rng.normal(size=(40, 6))
+    np.testing.assert_array_equal(f.predict(Xq), clone.predict(Xq))
+
+
+# ----------------------------------------------------------------- oracles --
+def test_oracle_registry_and_auto():
+    assert set(ORACLES) == {"kernelsim", "pallas", "hlo"}
+    # CPU test environment -> kernelsim is the auto choice
+    assert default_oracle_name() == "kernelsim"
+    assert isinstance(resolve_oracle("auto", HW), KernelSimOracle)
+    assert isinstance(resolve_oracle(None, HW), KernelSimOracle)
+    orc = resolve_oracle({"name": "hlo", "bucket": 1.5}, HW)
+    assert isinstance(orc, HLOCostOracle) and orc.bucket == 1.5
+    inst = KernelSimOracle(HW)
+    assert resolve_oracle(inst, HW) is inst
+    with pytest.raises(KeyError, match="unknown oracle"):
+        resolve_oracle("nope", HW)
+
+
+def test_kernelsim_oracle_matches_virtual_kernels():
+    orc = KernelSimOracle(HW)
+    vk = VirtualKernels(HW)
+    q, kv = [64, 8, 1], [128, 512, 64]
+    assert orc.attention_prefill(q, kv, 8, 2, 64) == \
+        vk.attention_prefill(q, kv, 8, 2, 64)
+    # the fit-facing dispatch: all-q==1 batches go through decode pricing
+    assert orc.attention([1, 1], [256, 64], 8, 2, 64) == \
+        vk.attention_decode([256, 64], 8, 2, 64)
+    assert orc.grouped_gemm([32, 0, 96], 64, 128) == \
+        vk.grouped_gemm([32, 0, 96], 64, 128)
+
+
+def test_hlo_oracle_prices_and_caches():
+    orc = HLOCostOracle(HW)
+    t = orc.attention_prefill([16], [16], 2, 2, 16)
+    assert t > 0 and np.isfinite(t)
+    n = len(orc._cache)
+    # same bucketed shape -> no recompile, monotone in kv length
+    assert orc.attention_prefill([16], [16], 2, 2, 16) == t
+    assert len(orc._cache) == n
+    assert orc.grouped_gemm([8, 8], 32, 32) > 0
+
+
+# -------------------------------------------------------------------- grid --
+def test_grid_deterministic_and_clamped():
+    cfg = get_config("qwen2-7b", smoke=True)
+    limits = {"max_len": 256, "max_batch": 8, "max_tokens": 512}
+    g1 = build_grid(cfg, n_train=30, n_eval=10, seed=7, limits=limits)
+    g2 = build_grid(cfg, n_train=30, n_eval=10, seed=7, limits=limits)
+    assert [s.q_lens for s in g1.attn_train] == \
+        [s.q_lens for s in g2.attn_train]
+    for s in g1.attn_train + g1.attn_eval:
+        assert len(s.q_lens) <= 8
+        assert max(s.kv_lens) <= 256
+    # eval grid is disjoint from train (different seed stream)
+    assert [s.kv_lens for s in g1.attn_train[:10]] != \
+        [s.kv_lens for s in g1.attn_eval]
+
+
+# --------------------------------------------------------------- calibrate --
+def test_calibrate_writes_artifacts_with_provenance(qwen_artifacts):
+    root, result = qwen_artifacts
+    path = os.path.join(root, "A800-SXM4-80G", "attention.json")
+    assert result.artifact_paths["attention"] == path
+    art = load_artifact(path)
+    assert art.operator == "attention"
+    assert art.hardware == "A800-SXM4-80G"
+    assert art.model == "qwen2-7b-smoke"
+    assert art.oracle == "kernelsim"
+    assert art.spec_hash == art.provenance_hash()
+    assert art.geometry == {"n_heads": 4, "n_kv_heads": 2, "head_dim": 16}
+    found = discover_artifacts(root)
+    assert [a["operator"] for a in found] == ["attention"]
+    assert found[0]["mape"] == pytest.approx(
+        result.fidelity["attention"]["fitted"]["mape"])
+
+
+def test_fitted_beats_analytical_and_vidur_on_heldout(qwen_artifacts):
+    _, result = qwen_artifacts
+    fams = result.fidelity["attention"]
+    assert fams["fitted"]["mape"] < fams["analytical"]["mape"]
+    assert fams["fitted"]["mape"] < fams["vidur_proxy"]["mape"]
+
+
+def test_calibrate_is_deterministic(tmp_path):
+    r1 = calibrate(model="qwen2-7b", out_root=str(tmp_path / "a"),
+                   **CAL_KW)
+    r2 = calibrate(model="qwen2-7b", out_root=str(tmp_path / "b"),
+                   **CAL_KW)
+    assert r1.fidelity == r2.fidelity
+    a1 = load_artifact(r1.artifact_paths["attention"])
+    a2 = load_artifact(r2.artifact_paths["attention"])
+    assert a1.forest == a2.forest
+    assert a1.spec_hash == a2.spec_hash
+
+
+def test_calibrate_moe_fits_grouped_gemm(mixtral_artifacts):
+    root, result = mixtral_artifacts
+    assert set(result.artifacts) == {"attention", "grouped_gemm"}
+    fams = result.fidelity["grouped_gemm"]
+    assert fams["fitted"]["mape"] < fams["analytical"]["mape"]
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    ops = load_calibrated_ops(root, cfg, HW)
+    assert ops.attention is not None and ops.grouped is not None
+    # fitted pricing is live and positive
+    assert ops.grouped_gemm([8, 0, 16, 4], cfg.d_model,
+                            cfg.moe.expert_d_ff) > 0
+
+
+# ---------------------------------------------------- artifact error paths --
+def test_load_artifact_errors(tmp_path):
+    with pytest.raises(CalibrationError, match="repro calibrate"):
+        load_artifact(str(tmp_path / "missing.json"))
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    with pytest.raises(CalibrationError, match="unreadable"):
+        load_artifact(str(bad))
+    incomplete = tmp_path / "incomplete.json"
+    incomplete.write_text(json.dumps({"operator": "attention"}))
+    with pytest.raises(CalibrationError, match="missing field"):
+        load_artifact(str(incomplete))
+
+
+def test_load_artifact_version_gate(qwen_artifacts, tmp_path):
+    root, _ = qwen_artifacts
+    path = os.path.join(root, "A800-SXM4-80G", "attention.json")
+    with open(path) as f:
+        data = json.load(f)
+    data["version"] = 99
+    stale = tmp_path / "attention.json"
+    stale.write_text(json.dumps(data))
+    with pytest.raises(CalibrationError, match="version 99"):
+        load_artifact(str(stale))
+
+
+# ------------------------------------------------------------- spec + run --
+def test_spec_calibration_field_roundtrip_and_hash_stability():
+    plain = _spec()
+    assert "calibration" not in plain.to_dict()["opmodel"]
+    # the field must not perturb hashes of specs that do not use it
+    assert plain.spec_hash() == SimSpec.from_dict(plain.to_dict()).spec_hash()
+    cal = _spec(calibration="artifacts/calib")
+    d = cal.to_dict()
+    assert d["opmodel"]["calibration"] == "artifacts/calib"
+    assert SimSpec.from_dict(d).opmodel.calibration == "artifacts/calib"
+    assert cal.spec_hash() != plain.spec_hash()
+
+
+def test_calibration_requires_refined_name():
+    with pytest.raises(SpecError, match="refined"):
+        SimSpec(opmodel=OpModelSpec(name="analytical",
+                                    calibration="x")).validate()
+    with pytest.raises(SpecError, match="calibration"):
+        SimSpec(opmodel=OpModelSpec(name="refined",
+                                    calibration="")).validate()
+
+
+def test_run_with_calibration_deterministic(qwen_artifacts):
+    root, _ = qwen_artifacts
+    spec = _spec(calibration=root)
+
+    def stable(rep):
+        return json.dumps({"summary": rep.summary, "hash": rep.spec_hash,
+                           "clusters": rep.clusters,
+                           "conservation": rep.conservation,
+                           "events": rep.sim_events}, sort_keys=True)
+
+    r1, r2 = run(spec), run(spec)
+    assert stable(r1) == stable(r2)        # byte-identical on repeat
+    analytical = run(_spec())
+    assert r1.summary["ttft_p50_s"] != analytical.summary["ttft_p50_s"]
+
+
+def test_run_missing_artifact_spec_error():
+    with pytest.raises(SpecError, match="does not exist"):
+        run(_spec(calibration="/nonexistent/calib"))
+
+
+def test_run_hardware_mismatch_spec_error(qwen_artifacts):
+    root, _ = qwen_artifacts
+    spec = _spec(calibration=root,
+                 topology=TopologySpec(preset="colocated", n_replicas=1,
+                                       tp=1, hardware="H100-SXM"))
+    with pytest.raises(SpecError, match="H100-SXM"):
+        run(spec)
+
+
+def test_run_geometry_mismatch_spec_error(qwen_artifacts):
+    root, _ = qwen_artifacts
+    spec = _spec(calibration=root, model=ModelRef("qwen2-7b", smoke=False))
+    with pytest.raises(SpecError, match="geometry"):
+        run(spec)
+
+
+# ---------------------------------------------------------------- fidelity --
+def test_fidelity_entry_and_append_dedupe(qwen_artifacts, tmp_path):
+    _, result = qwen_artifacts
+    entry = entry_from_result(result, "t0")
+    assert entry["model"] == "qwen2-7b-smoke"
+    assert entry["oracle"] == "kernelsim"
+    assert "fitted" in entry["operators"]["attention"]
+    path = str(tmp_path / "FIDELITY.json")
+    append_fidelity(path, entry)
+    append_fidelity(path, dict(entry, label="t1"))
+    append_fidelity(path, dict(entry, label="t0"))   # replaces, not dups
+    traj = load_trajectory(path)
+    assert [e["label"] for e in traj] == ["t1", "t0"]
+
+
+def test_fidelity_regression_gate(qwen_artifacts):
+    _, result = qwen_artifacts
+    base = entry_from_result(result, "base")
+    fresh_ok = json.loads(json.dumps(base))
+    fresh_ok["label"] = "fresh"
+    ok, lines = check_fidelity_regression(fresh_ok, [base], tolerance=0.2)
+    assert ok and any("OK" in l for l in lines)
+    fresh_bad = json.loads(json.dumps(fresh_ok))
+    m = fresh_bad["operators"]["attention"]["fitted"]["mape"]
+    fresh_bad["operators"]["attention"]["fitted"]["mape"] = m * 1.5
+    ok, lines = check_fidelity_regression(fresh_bad, [base], tolerance=0.2)
+    assert not ok and any("FAIL" in l for l in lines)
+    # empty trajectory passes (first-ever run)
+    ok, _ = check_fidelity_regression(fresh_ok, [], tolerance=0.2)
+    assert ok
+
+
+def test_fidelity_gate_noncomparable_fallback(qwen_artifacts):
+    _, result = qwen_artifacts
+    base = entry_from_result(result, "base")
+    fresh = json.loads(json.dumps(base))
+    fresh["n_train"] = base["n_train"] * 2   # different fit config
+    ok, lines = check_fidelity_regression(fresh, [base], tolerance=0.2)
+    assert ok and any("no comparable" in l for l in lines)
+
+
+# --------------------------------------------------------------------- cli --
+def test_cli_calibrate_and_list(tmp_path, capsys):
+    from repro.api.cli import main
+    out = str(tmp_path / "calib")
+    fid = str(tmp_path / "FIDELITY.json")
+    entry = str(tmp_path / "entry.json")
+    rc = main(["calibrate", "--oracle", "kernelsim", "--model", "qwen2-7b",
+               "--smoke", "--train-samples", "60", "--eval-samples", "20",
+               "--max-len", "512", "--max-batch", "16", "--out", out,
+               "--fidelity", fid, "--entry-out", entry, "--label", "cli"])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "fitted" in text and "vidur_proxy" in text
+    assert os.path.isfile(os.path.join(out, "A800-SXM4-80G",
+                                       "attention.json"))
+    assert load_trajectory(fid)[0]["label"] == "cli"
+    with open(entry) as f:
+        assert json.load(f)["label"] == "cli"
+    rc = main(["calibrate", "--oracle", "bogus"])
+    assert rc == 2
+
+    old = os.getcwd()
+    os.chdir(tmp_path)   # list discovers ./artifacts/calib (none here)
+    try:
+        assert main(["list"]) == 0
+    finally:
+        os.chdir(old)
+    text = capsys.readouterr().out
+    assert "oracle backends" in text
+    assert "kernelsim" in text

@@ -1,10 +1,73 @@
 """The scan-aware HLO cost parser: corrected totals must match unrolled."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.launch import hlo_cost
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "tiny.hlo")
+
+
+# ---------------------------------------------------------------------------
+# Checked-in text fixture: a hand-written module (dot inside a while with
+# known_trip_count=5, a fusion, an all-reduce) with hand-computed totals —
+# no compiler in the loop, so these pin the parser itself.
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_hlo():
+    with open(FIXTURE) as f:
+        return f.read()
+
+
+def test_fixture_parse_structure(tiny_hlo):
+    comps = hlo_cost.parse_hlo(tiny_hlo)
+    assert set(comps) == {"main", "body", "cond", "add", "fused_add"}
+    by_op = {i.op: i for i in comps["main"].instrs}
+    assert by_op["while"].trip_count == 5
+    assert sorted(by_op["while"].called) == ["body", "cond"]
+    assert by_op["fusion"].called == ["fused_add"]
+    assert by_op["all-reduce"].called == ["add"]
+    root = [i for i in comps["main"].instrs if i.is_root]
+    assert len(root) == 1 and root[0].op == "copy"
+    dot = [i for i in comps["body"].instrs if i.op == "dot"][0]
+    assert dot.out_shapes == [("f32", [8, 16])]
+
+
+def test_fixture_analyze_totals(tiny_hlo):
+    costs = hlo_cost.analyze(tiny_hlo)
+    # dot: 2 * (8*16) * 16 = 4096 flops, times trip_count 5
+    assert costs["flops"] == pytest.approx(5 * 4096)
+    # all-reduce output: 8*16*4 = 512 bytes
+    assert costs["collective_bytes"] == pytest.approx(512)
+    assert costs["coll_all-reduce"] == pytest.approx(512)
+    # bytes: dot (512 out + 512 + 1024 operands) * 5 iterations
+    #      + fusion (512 out + 512 + 512 operands, internal add free)
+    #      + all-reduce (512 + 512) + root copy (512 + 512);
+    # parameter/tuple/gte/while are free under XLA's fusion byte model
+    assert costs["bytes"] == pytest.approx(5 * 2048 + 1536 + 1024 + 1024)
+
+
+def test_fixture_entry_selection_and_override(tiny_hlo):
+    # entry auto-detected as the never-called computation ("main"); an
+    # explicit entry restricts the walk to that computation
+    full = hlo_cost.analyze(tiny_hlo)
+    body_only = hlo_cost.analyze(tiny_hlo, entry="body")
+    assert body_only["flops"] == pytest.approx(4096)   # one iteration
+    assert body_only["collective_bytes"] == 0.0
+    assert full["flops"] == pytest.approx(5 * body_only["flops"])
+
+
+def test_fixture_roofline_terms(tiny_hlo):
+    costs = hlo_cost.analyze(tiny_hlo)
+    terms = hlo_cost.roofline_terms(costs, n_chips=1, peak_flops=1e12,
+                                    hbm_bw=1e11, ici_bw=1e10)
+    assert terms["t_compute_s"] == pytest.approx(20480 / 1e12)
+    assert terms["t_memory_s"] == pytest.approx(13824 / 1e11)
+    assert terms["t_collective_s"] == pytest.approx(512 / 1e10)
+    assert terms["bottleneck"] == "memory"
 
 
 def _costs(fn, *args):

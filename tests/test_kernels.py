@@ -31,6 +31,8 @@ def tol(dtype):
     (2, 32, 32, 4, 2, 64, True, 12),     # sliding window
     (1, 24, 24, 8, 8, 112, True, 0),     # kimi head_dim 112 (pad path)
     (1, 16, 16, 4, 4, 32, False, 0),     # bidirectional (encoder)
+    (1, 32, 32, 8, 8, 112, True, 8),     # pad path + sliding window
+    (1, 16, 48, 4, 2, 64, True, 0),      # S != T (q chunk over longer KV)
 ])
 def test_flash_attention_matches_ref(B, S, T, H, K, hd, causal, window, dtype):
     q, k, v = arr(B, S, H, hd, dtype=dtype), arr(B, T, K, hd, dtype=dtype), \
@@ -89,6 +91,42 @@ def test_grouped_gemm_ragged_property(e_and_sizes):
     # rows beyond group size must be exactly zero
     for e in range(E):
         assert np.all(np.asarray(got)[e, sizes[e]:] == 0.0)
+
+
+@pytest.mark.parametrize("fill", ["full", "one"])
+def test_decode_attention_length_edges(fill):
+    """lengths == T (whole cache valid) and lengths == 1 (single token)."""
+    B, T, H, K, hd = 2, 48, 4, 2, 32
+    q = arr(B, H, hd)
+    k, v = arr(B, T, K, hd), arr(B, T, K, hd)
+    lens = jnp.full((B,), T if fill == "full" else 1, jnp.int32)
+    got = ops.decode_attention(q, k, v, lens, bk=16)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_grouped_gemm_all_empty_groups():
+    E, C, din, dout = 3, 16, 32, 48
+    x, w = arr(E, C, din), arr(E, din, dout)
+    gs = jnp.zeros((E,), jnp.int32)
+    got = ops.grouped_gemm(x, w, gs, bm=8, bn=48, bkk=32)
+    assert np.all(np.asarray(got) == 0.0)
+
+
+def test_pallas_oracle_times_real_kernels():
+    """The calibration oracle drives ops.py end to end (interpret mode on
+    CPU) and caches per bucketed shape."""
+    from repro.calib import PallasOracle
+    from repro.core.hardware import HARDWARE
+    orc = PallasOracle(HARDWARE["A800-SXM4-80G"], reps=1)
+    t_pre = orc.attention_prefill([16, 24], [16, 24], 2, 2, 16)
+    t_dec = orc.attention_decode([16, 32], 2, 2, 16)
+    t_gg = orc.grouped_gemm([8, 16], 32, 32)
+    assert t_pre > 0 and t_dec > 0 and t_gg > 0
+    n_cached = len(orc._cache)
+    assert orc.attention_prefill([16, 24], [16, 24], 2, 2, 16) == t_pre
+    assert len(orc._cache) == n_cached   # second call is a pure cache hit
 
 
 def test_flash_vs_decode_consistency():
