@@ -243,6 +243,44 @@ def run_bench(smoke: bool = False, fleet_1m: bool = False
         f"events={ev};events_per_s={ev / wall:,.0f};"
         f"completed={rep.summary['n_completed']};mode=windowed+numpy")
 
+    # ---- fabric: shared-uplink contention pricing on vs off ---------------
+    # bursty PD traffic over a slow shared uplink, priced twice: with the
+    # contention-modeling fabric and with the legacy point-to-point path.
+    # Gated on the fabric-on events/s (the new repricing code path).
+    n_fab = 300 if smoke else 3000
+    fab_wl = {"n_requests": n_fab, "arrival": "burst", "burst_size": 50,
+              "burst_period": 0.5, "prompt_mean": 512, "output_mean": 32,
+              "seed": 0}
+    topo = {"preset": "pd", "n_prefill": 2, "n_decode": 2}
+    rep_on = run(_spec("fabric-on", {
+        "topology": dict(topo, fabric={"mode": "shared",
+                                       "oversubscription": 2.0,
+                                       "uplink_bw": 5e9}),
+        "workload": fab_wl}))
+    rep_off = run(_spec("fabric-off", {"topology": topo,
+                                       "workload": fab_wl}))
+    ev, wall = rep_on.sim_events, rep_on.wall_clock_s
+    results["fabric"] = {
+        "n_requests": n_fab, "events": ev, "wall_s": wall,
+        "events_per_s": ev / wall,
+        "sim_speedup": rep_on.sim_duration_s / wall,
+        "completed": rep_on.summary["n_completed"],
+        "contention_off_wall_s": rep_off.wall_clock_s,
+        "contention_off_events_per_s":
+            rep_off.sim_events / rep_off.wall_clock_s,
+        "fabric_transfers": rep_on.summary["fabric_transfers"],
+        "fabric_contention_delay_s":
+            rep_on.summary["fabric_contention_delay_s"],
+        "engine_mode": "serial", "predictor_backend": "python",
+    }
+    lines.append(
+        f"fabric_pd_{n_fab}req,{wall * 1e6 / max(ev, 1):.2f},"
+        f"events={ev};events_per_s={ev / wall:,.0f};"
+        f"off_events_per_s="
+        f"{rep_off.sim_events / rep_off.wall_clock_s:,.0f};"
+        f"contention_delay="
+        f"{rep_on.summary['fabric_contention_delay_s'] * 1e3:.2f}ms")
+
     # ---- Table-1 feature matrix -------------------------------------------
     n_cell = 20 if smoke else 100
     for name, body in _cells(n_cell).items():

@@ -31,6 +31,11 @@ SUMMARY_KEYS = (
     "scale_up_events", "scale_down_events", "rebalance_events",
     "routing_imbalance", "provisioned_gpu_seconds", "idle_gpu_seconds",
     "prefix_hit_token_frac", "tenant_slo_attainment_min",
+    # $ accounting + shared-fabric contention
+    "dollars_per_hour", "provisioned_dollars", "idle_dollars",
+    "tok_per_s_per_dollar",
+    "fabric_transfers", "fabric_exposed_comm_s",
+    "fabric_contention_delay_s",
 )
 
 
@@ -185,6 +190,7 @@ def _cmd_list(args: argparse.Namespace) -> int:
     from repro.core.routing import ROUTERS
     from repro.fleet.router import FLEET_ROUTERS
     from repro.api.spec import ARRIVALS, PRESETS
+    from repro.core.fabric import COLLECTIVES, FABRIC_MODES
     from repro.workload.generator import RATE_CURVES
     arts = [
         f"{a['hardware']}/{a['operator']} (model={a['model']} "
@@ -192,9 +198,16 @@ def _cmd_list(args: argparse.Namespace) -> int:
         + (f" mape={a['mape']:.2%}" if a.get("mape") is not None else "")
         + ")"
         for a in discover_artifacts()]
+    hw_rows = []
+    for n in sorted(HARDWARE):
+        dph = HARDWARE[n].dollars_per_hour
+        hw_rows.append(f"{n} (${dph:.2f}/GPU-hr)" if dph > 0
+                       else f"{n} (unpriced)")
     sections = {
         "models": sorted(REGISTRY),
-        "hardware": sorted(HARDWARE),
+        "hardware": hw_rows,
+        "fabric modes": [f"{m} (collectives: {', '.join(COLLECTIVES)})"
+                         if m == "shared" else m for m in FABRIC_MODES],
         "topology presets": list(PRESETS) + ["(or inline clusters/links)"],
         "arrival processes": list(ARRIVALS),
         "rate curves": list(RATE_CURVES),

@@ -109,7 +109,8 @@ def build(spec: SimSpec, *,
     common = dict(ops=ops, routing=pol.router, seed=spec.seed,
                   engine=engine,
                   memory=pol.memory, queue_policy=pol.scheduler,
-                  memoize=topo.memoize, pipeline=pipeline)
+                  memoize=topo.memoize, pipeline=pipeline,
+                  fabric=topo.fabric_config())
     if spec.memory is not None:
         # no memory section -> omit the kwargs so build_system's own
         # defaults apply (one source of truth for the legacy values)
@@ -154,12 +155,17 @@ def build(spec: SimSpec, *,
                                if topo.expert_cluster_hw else None),
             expert_link=link, memoize=topo.memoize, **common)
     else:
-        # inline StageGraph
+        # inline StageGraph (the graph itself carries the fabric config)
         graph = topo.inline_graph(batching=lambda role, name:
                                   pol.batching_for(role, name))
         handle = build_system(cfg, hw, graph, transfer_bw=topo.transfer_bw,
                               **{k: v for k, v in common.items()
-                                 if k != "memoize"})
+                                 if k not in ("memoize", "fabric")})
+    if topo.dollars_per_hour:
+        # spec-level $/GPU-hr overrides reprice each cluster's hardware;
+        # downstream cost accounting reads cluster.hw
+        for cluster in handle.clusters.values():
+            cluster.hw = topo.hw_pricing(cluster.hw)
     if spec.opmodel.backend != "python":
         for cluster in handle.clusters.values():
             for w in cluster.replicas:
@@ -195,6 +201,12 @@ def _cluster_breakdown(handle: SystemHandle) -> Dict[str, Dict[str, Any]]:
             "hardware": getattr(getattr(cluster, "hw", None), "name", None),
             "utilization": cluster.utilization(now),
             "replicas": {w.name: dict(w.stats) for w in cluster.replicas},
+        }
+        # provisioning cost: the cluster's device-count x $/GPU-hr rate
+        # (run()/run_fleet fill in the time-integrated $ figures)
+        info["cost"] = {
+            "dollars_per_hour": info["devices"] * getattr(
+                getattr(cluster, "hw", None), "dollars_per_hour", 0.0),
         }
         # memory-subsystem observability: per-cluster KV manager aggregates
         mems = [w.memory for w in cluster.replicas if w.memory is not None]
@@ -327,6 +339,30 @@ def run(spec: SimSpec, *,
         summary["kv_transfer_exposed_s"] = ts["exposed_s"]
         summary["kv_transfer_exposed_frac"] = (
             ts["exposed_s"] / ts["serial_s"] if ts["serial_s"] > 0 else 1.0)
+    # first-class $ accounting: provisioned rate from each cluster's
+    # hardware pricing, integrated over the measured duration
+    duration = float(summary.get("duration_s") or 0.0)
+    rate = 0.0
+    for c in clusters.values():
+        crate = c["cost"]["dollars_per_hour"]
+        c["cost"]["provisioned_dollars"] = crate * duration / 3600.0
+        toks = sum(r.get("tokens", 0) for r in c["replicas"].values())
+        c["cost"]["tok_per_s_per_dollar"] = (
+            float(toks / duration / crate) if crate > 0 and duration > 0
+            else None)
+        rate += crate
+    summary["dollars_per_hour"] = rate
+    summary["provisioned_dollars"] = rate * duration / 3600.0
+    tput = float(summary.get("throughput_tok_s") or 0.0)
+    summary["tok_per_s_per_dollar"] = tput / rate if rate > 0 else None
+    if handle.fabric is not None:
+        fs = handle.fabric.stats
+        exposed = handle.fabric.exposed_comm_s()
+        uncontended = handle.fabric.uncontended_comm_s()
+        summary["fabric_transfers"] = fs["transfers"]
+        summary["fabric_exposed_comm_s"] = exposed
+        summary["fabric_uncontended_comm_s"] = uncontended
+        summary["fabric_contention_delay_s"] = exposed - uncontended
     return Report(
         name=spec.name,
         spec=spec.to_dict(),

@@ -101,6 +101,44 @@ class ModelRef:
 
 
 # ------------------------------------------------------------ topology ----
+@dataclass
+class FabricSpec:
+    """Shared network fabric (see ``repro.core.fabric``).
+
+    ``mode: none`` (the default) keeps the legacy isolated point-to-point
+    link pricing bit-identically; ``mode: shared`` attaches every
+    cluster's NIC uplink to a common fabric where concurrent transfers
+    split effective bandwidth processor-sharing style and inter-node
+    collectives are re-priced topology-aware (``collective``: ring or
+    tree, with ``latency_s`` per hop).  ``oversubscription`` divides every
+    uplink's capacity (2.0 = a 2:1 oversubscribed spine);
+    ``uplink_bw`` overrides the per-cluster uplink (default: each
+    cluster's ``inter_node_bw``).
+    """
+    mode: str = "none"
+    oversubscription: float = 1.0
+    latency_s: float = 0.0
+    collective: str = "ring"
+    uplink_bw: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        _coerce(self, float, "oversubscription", "latency_s", "uplink_bw")
+
+    def to_config(self):
+        from repro.core.fabric import FabricConfig
+        return FabricConfig(mode=self.mode,
+                            oversubscription=self.oversubscription,
+                            latency_s=self.latency_s,
+                            collective=self.collective,
+                            uplink_bw=self.uplink_bw)
+
+    def validate(self) -> None:
+        try:
+            self.to_config().validate()
+        except ValueError as e:
+            raise SpecError(f"topology.fabric: {e}") from e
+
+
 _CLUSTER_KEYS = {
     "name", "role", "n_replicas", "tp", "pp", "ep", "hardware", "step",
     "m", "attn_tp", "ffn_tp", "ffn_ep", "remote_expert_ranks",
@@ -144,6 +182,11 @@ class TopologySpec:
     # inline graph (preset=None)
     clusters: Optional[List[Dict[str, Any]]] = None
     links: Optional[List[Dict[str, Any]]] = None
+    # shared-fabric contention (None == {"mode": "none"} == legacy pricing)
+    fabric: Optional[FabricSpec] = None
+    # per-hardware-name $/GPU-hr overrides, e.g. {"H100-SXM": 4.5};
+    # None keeps each HardwareSpec's built-in dollars_per_hour
+    dollars_per_hour: Optional[Dict[str, float]] = None
 
     def __post_init__(self) -> None:
         _coerce(self, float, "transfer_bw", "expert_link_bw",
@@ -152,10 +195,52 @@ class TopologySpec:
                 "n_decode", "prefill_tp", "decode_tp", "m", "attn_tp",
                 "ffn_tp", "ffn_ep")
         self.remote_expert_ranks = [int(r) for r in self.remote_expert_ranks]
+        if isinstance(self.fabric, str):
+            self.fabric = FabricSpec(mode=self.fabric)
+        elif isinstance(self.fabric, Mapping):
+            self.fabric = _from_mapping(FabricSpec, self.fabric,
+                                        "topology.fabric")
+
+    def fabric_config(self):
+        """The core ``FabricConfig`` for build time; None when unset or
+        mode == "none" (the builders then skip fabric construction)."""
+        if self.fabric is None or self.fabric.mode == "none":
+            return None
+        return self.fabric.to_config()
+
+    def hw_pricing(self, hw: HardwareSpec) -> HardwareSpec:
+        """Apply any ``dollars_per_hour`` override for this hardware."""
+        if self.dollars_per_hour and hw.name in self.dollars_per_hour:
+            return hw.with_(
+                dollars_per_hour=float(self.dollars_per_hour[hw.name]))
+        return hw
 
     # ------------------------------------------------------- validation --
     def validate(self) -> None:
         _resolve_hw(self.hardware, "topology.hardware")
+        if self.fabric is not None:
+            self.fabric.validate()
+        if self.transfer_bw is not None and self.transfer_bw <= 0:
+            raise SpecError(f"topology.transfer_bw: must be > 0 "
+                            f"(a zero-bandwidth link would price KV "
+                            f"transfers as free), got {self.transfer_bw}")
+        if self.dollars_per_hour is not None:
+            if not isinstance(self.dollars_per_hour, Mapping):
+                raise SpecError(
+                    "topology.dollars_per_hour: expected a mapping of "
+                    "hardware name -> $/GPU-hr, got "
+                    f"{type(self.dollars_per_hour).__name__}")
+            for k, v in self.dollars_per_hour.items():
+                _resolve_hw(k, f"topology.dollars_per_hour[{k!r}]")
+                try:
+                    rate = float(v)
+                except (TypeError, ValueError):
+                    raise SpecError(
+                        f"topology.dollars_per_hour[{k!r}]: expected a "
+                        f"number, got {v!r}") from None
+                if rate < 0:
+                    raise SpecError(f"topology.dollars_per_hour[{k!r}]: "
+                                    f"must be >= 0, got {rate}")
         if self.preset is None:
             if not self.clusters:
                 raise SpecError("topology: preset=None needs inline "
@@ -190,6 +275,9 @@ class TopologySpec:
         elif self.expert_cluster_hw or self.expert_link_bw:
             raise SpecError("topology: expert_cluster_hw/expert_link_bw "
                             "have no effect without remote_expert_ranks")
+        if self.expert_link_bw is not None and self.expert_link_bw <= 0:
+            raise SpecError(f"topology.expert_link_bw: must be > 0, "
+                            f"got {self.expert_link_bw}")
 
     def cluster_names(self) -> List[str]:
         if self.preset == "colocated":
@@ -276,10 +364,17 @@ class TopologySpec:
             if "src" not in l or "dst" not in l or "bandwidth" not in l:
                 raise SpecError(f"{path}: 'src', 'dst' and 'bandwidth' are "
                                 f"required")
-            links.append(LinkSpec(l["src"], l["dst"],
-                                  bandwidth=float(l["bandwidth"]),
+            bw = float(l["bandwidth"])
+            if bw <= 0:
+                raise SpecError(
+                    f"{path}.bandwidth: must be > 0 bytes/s, got {bw} — "
+                    f"a zero-bandwidth link would silently price its "
+                    f"transfers as free; use a large finite bandwidth to "
+                    f"model a negligible-cost link")
+            links.append(LinkSpec(l["src"], l["dst"], bandwidth=bw,
                                   latency=float(l.get("latency", 0.0))))
-        graph = StageGraph(clusters=clusters, links=links)
+        graph = StageGraph(clusters=clusters, links=links,
+                           fabric=self.fabric_config())
         try:
             graph.validate()
         except ValueError as e:
@@ -914,6 +1009,13 @@ class SimSpec:
                     "memory/policy.memory: both select a KV manager — use "
                     "the 'memory' section (policy.memory is the legacy "
                     "manager-only knob)")
+            if self.memory.transfer_overlap > 0.0 \
+                    and self.topology.fabric_config() is not None:
+                raise SpecError(
+                    "topology.fabric/memory.transfer_overlap: layer-"
+                    "streamed KV transfer prices chunks against a "
+                    "dedicated link and cannot be combined with shared-"
+                    "fabric contention — set one of them to its default")
         if self.slo is not None:
             self.slo.validate()
         if self.fleet is not None:
@@ -976,6 +1078,18 @@ class SimSpec:
         # predate the field, so spec hashes and goldens stay bit-identical
         if d.get("opmodel", {}).get("calibration") is None:
             d["opmodel"].pop("calibration", None)
+        # same rule for the fabric/cost fields: unset must serialize like
+        # specs that predate them
+        topo = d.get("topology", {})
+        for k in ("fabric", "dollars_per_hour"):
+            if topo.get(k) is None:
+                topo.pop(k, None)
+        for inst in (d.get("fleet") or {}).get("instances") or []:
+            it = inst.get("topology")
+            if isinstance(it, dict):
+                for k in ("fabric", "dollars_per_hour"):
+                    if it.get(k) is None:
+                        it.pop(k, None)
         return d
 
     @classmethod

@@ -34,7 +34,8 @@ class GlobalController:
                  links: Optional[Dict[Tuple[str, str], LinkSpec]] = None,
                  entry: Optional[List[str]] = None,
                  kv_layers: int = 1,
-                 transfer_overlap: float = 0.0):
+                 transfer_overlap: float = 0.0,
+                 fabric=None):
         self.engine = engine
         self.mode = mode
         self.clusters = clusters
@@ -51,6 +52,9 @@ class GlobalController:
         # pricing bit-for-bit
         self.kv_layers = max(kv_layers, 1)
         self.transfer_overlap = transfer_overlap
+        # shared-fabric contention model (core.fabric.Fabric); None keeps
+        # the legacy isolated point-to-point transfer pricing
+        self.fabric = fabric
         self.transfer_stats = {"transfers": 0, "bytes": 0.0,
                                "serial_s": 0.0, "exposed_s": 0.0}
         self.pending_transfer: List[Request] = []   # PREFILL_COMPLETE queue
@@ -228,13 +232,35 @@ class GlobalController:
             self.transfer_stats["transfers"] += 1
             self.transfer_stats["bytes"] += nbytes
             self.transfer_stats["serial_s"] += serial
-            self.transfer_stats["exposed_s"] += dt
             self._transfers_in_flight += 1
-            self.engine.after(
-                dt, EV.KV_TRANSFER_DONE,
-                lambda ev, r=r, tgt=target: self._transfer_done(r, tgt),
-                rid=r.rid, bytes=nbytes)
+            if self.fabric is not None:
+                # contention-priced path: the point-to-point time above is
+                # only the uncontended floor (serial_s); actual completion
+                # and exposed_s come from the fabric's processor-sharing
+                # re-pricing
+                link = self.links.get((src_name, target_cluster.name)) \
+                    if src_name is not None else None
+                cap = link.bandwidth if link is not None \
+                    else (self.transfer_bw or None)
+                lat = link.latency if link is not None else 0.0
+                t0 = self.engine.now
+                self.fabric.start_transfer(
+                    src_name, target_cluster.name, nbytes, cap=cap,
+                    latency=lat,
+                    done=lambda r=r, tgt=target, t0=t0:
+                        self._fabric_transfer_done(r, tgt, t0))
+            else:
+                self.transfer_stats["exposed_s"] += dt
+                self.engine.after(
+                    dt, EV.KV_TRANSFER_DONE,
+                    lambda ev, r=r, tgt=target: self._transfer_done(r, tgt),
+                    rid=r.rid, bytes=nbytes)
         self.pending_transfer = remaining
+
+    def _fabric_transfer_done(self, r: Request, target: ReplicaWorker,
+                              t0: float) -> None:
+        self.transfer_stats["exposed_s"] += self.engine.now - t0
+        self._transfer_done(r, target)
 
     def _transfer_done(self, r: Request, target: ReplicaWorker) -> None:
         self._transfers_in_flight -= 1

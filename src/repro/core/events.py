@@ -41,6 +41,8 @@ class EV(enum.Enum):
     EXPERT_DISPATCH_DONE = "expert_dispatch_done"
     EXPERT_RANK_DONE = "expert_rank_done"
     EXPERT_COMBINE_DONE = "expert_combine_done"
+    # shared-fabric transfers (epoch-guarded completion; stale ones no-op)
+    FABRIC_TRANSFER_DONE = "fabric_transfer_done"
     # fleet control plane (multi-instance serving)
     AUTOSCALE_TICK = "autoscale_tick"
     INSTANCE_READY = "instance_ready"          # cold start finished

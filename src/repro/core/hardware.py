@@ -18,6 +18,8 @@ class HardwareSpec:
     # tile geometry used by the virtual-kernel simulator (kernelsim)
     n_cores: int = 108         # SMs (GPU) or tensor-cores (TPU)
     mxu_tile: int = 128
+    # provisioning cost per device (on-demand $/GPU-hr); 0.0 = unpriced
+    dollars_per_hour: float = 0.0
 
     def with_(self, **kw) -> "HardwareSpec":
         return replace(self, **kw)
@@ -33,6 +35,7 @@ A800_SXM4_80G = HardwareSpec(
     inter_node_bw=25e9,
     devices_per_node=8,
     n_cores=108,
+    dollars_per_hour=1.90,
 )
 
 H100_SXM = HardwareSpec(
@@ -44,6 +47,7 @@ H100_SXM = HardwareSpec(
     inter_node_bw=50e9,
     devices_per_node=8,
     n_cores=132,
+    dollars_per_hour=3.90,
 )
 
 # TPU v5e: the dry-run/roofline target (197 TFLOP/s bf16, 819 GB/s HBM,
@@ -58,6 +62,7 @@ TPU_V5E = HardwareSpec(
     devices_per_node=256,      # one pod
     n_cores=2,                 # tensor cores per chip
     mxu_tile=128,
+    dollars_per_hour=1.20,
 )
 
 HARDWARE = {h.name: h for h in (A800_SXM4_80G, H100_SXM, TPU_V5E)}
@@ -72,8 +77,15 @@ class LinkSpec:
     latency: float = 0.0       # base latency per transfer (s)
 
     def transfer_time(self, nbytes: float) -> float:
-        return self.latency + (nbytes / self.bandwidth if self.bandwidth
-                               else 0.0)
+        if self.bandwidth <= 0:
+            # previously bandwidth=0 silently priced the transfer as free;
+            # spec-level validation rejects it up front, and this guard
+            # catches programmatic LinkSpec construction
+            raise ValueError(
+                f"link {self.src}->{self.dst}: bandwidth must be > 0 "
+                f"(got {self.bandwidth}); a free link is almost certainly "
+                f"a spec mistake — use a large finite bandwidth instead")
+        return self.latency + nbytes / self.bandwidth
 
 
 @dataclass(frozen=True)

@@ -95,6 +95,14 @@ class OperatorModelSet:
         bw = self.hw.inter_node_bw if inter_node else self.hw.intra_node_bw
         return nbytes / bw + self.hw.op_overhead
 
+    def m2n(self, nbytes: float, m: int, n: int, *,
+            inter_node: bool = True) -> float:
+        """M2N dispatch/combine (m senders fan nbytes into n receivers).
+        The flat baseline ignores the fan shape — exactly p2p — so callers
+        switching from p2p to m2n stay bit-identical without a fabric;
+        FabricOps overrides this with the NIC-lane-aware model."""
+        return self.p2p(nbytes, inter_node=inter_node)
+
     # ---- helpers -------------------------------------------------------------
     def membound(self, nbytes: float) -> float:
         return nbytes / self.hw.hbm_bw + self.hw.op_overhead

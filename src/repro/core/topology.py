@@ -36,6 +36,7 @@ from repro.configs.base import ModelConfig
 from repro.core.cluster import ClusterWorker, ReplicaWorker
 from repro.core.controller import GlobalController
 from repro.core.engine import SimEngine
+from repro.core.fabric import Fabric, FabricConfig, FabricOps
 from repro.core.hardware import HardwareSpec, LinkSpec, ParallelismConfig
 from repro.core.metrics import MetricsCollector
 from repro.core.opmodels.analytical import OperatorModelSet
@@ -56,6 +57,7 @@ class SystemHandle:
     controller: GlobalController
     clusters: dict
     n_devices: int
+    fabric: Optional[Fabric] = None
 
     def run(self, requests: List[Request], until: float = float("inf"), *,
             closed_concurrency: Optional[int] = None,
@@ -137,6 +139,9 @@ class StageGraph:
     """The full topology: clusters + directed inter-cluster links."""
     clusters: List[ClusterSpec]
     links: List[LinkSpec] = field(default_factory=list)
+    # shared-fabric contention model; None or mode="none" keeps the legacy
+    # isolated point-to-point pricing bit-identically
+    fabric: Optional[FabricConfig] = None
 
     def validate(self) -> None:
         names = [c.name for c in self.clusters]
@@ -233,6 +238,15 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
                 f"model config ({cfg.name} is dense)")
     engine = engine or SimEngine()
     ops = ops or OperatorModelSet(hw)
+    fabric = None
+    if graph.fabric is not None and graph.fabric.mode != "none":
+        if transfer_overlap > 0.0:
+            raise ValueError(
+                "fabric contention and layer-streamed KV transfer "
+                "(transfer_overlap > 0) cannot be combined: streamed "
+                "chunks are priced against a dedicated link, not the "
+                "shared fabric")
+        fabric = Fabric(engine, graph.fabric)
     routing = resolve_router(routing)
     mem_cls, mem_kw = resolve_memory(memory)
     qpolicy = resolve_scheduler(queue_policy)
@@ -249,7 +263,8 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
         metrics=metrics, links=graph.link_table(),
         entry=graph.entry_clusters,
         kv_layers=pred0.kv_layer_count(),
-        transfer_overlap=transfer_overlap)
+        transfer_overlap=transfer_overlap,
+        fabric=fabric)
     hooks = controller.hooks()
 
     clusters: Dict[str, ClusterWorker] = {}
@@ -257,6 +272,11 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
     for spec in graph.clusters:
         hw_c = spec.hardware or hw
         ops_c = ops if spec.hardware is None else OperatorModelSet(hw_c)
+        if fabric is not None:
+            # the cluster's NIC uplink joins the shared fabric, and its
+            # inter-node collective terms are re-priced fabric-aware
+            fabric.attach(spec.name, hw_c.inter_node_bw)
+            ops_c = FabricOps(ops_c, fabric.config, fabric)
         prefix = spec.replica_prefix or spec.name
         pipe = spec.pipeline if spec.pipeline is not None else default_pipe
         policy = spec.policy
@@ -301,4 +321,5 @@ def build_system(cfg: ModelConfig, hw: HardwareSpec, graph: StageGraph, *,
         n_devices += spec.n_replicas * spec.devices_per_replica()
 
     controller.clusters.update(clusters)
-    return SystemHandle(engine, controller, clusters, n_devices)
+    return SystemHandle(engine, controller, clusters, n_devices,
+                        fabric=fabric)

@@ -129,8 +129,14 @@ def simulate_af_decode_step(cfg: ModelConfig, hw: HardwareSpec,
         return (n_mats * ops.gemm(n_tok, cfg.d_ff // tp, d)
                 + ops.all_reduce(2.0 * n_tok * d, tp))
 
+    # A2F/F2A is MegaScale's M2N fan: attention ranks to FFN ranks (EP
+    # group for MoE, TP group for dense).  The flat model prices it exactly
+    # as p2p; FabricOps spreads the payload over the narrow side's NICs.
+    n_attn = max(attn_par.devices, 1)
+    n_ffn = max(ep, ffn_par.devices, 1)
+
     def t_xfer(n_tok: int) -> float:
-        return ops.p2p(2.0 * n_tok * d, inter_node=True)
+        return ops.m2n(2.0 * n_tok * d, n_attn, n_ffn)
 
     attn_kinds = [k for k in cfg.pattern]
     stats = AFStepStats()
@@ -405,7 +411,7 @@ def build_af(cfg: ModelConfig, hw: HardwareSpec, *,
              memory=None, queue_policy=None,
              memoize: bool = True,
              pipeline=None, transfer_overlap: float = 0.0,
-             kv_frac: float = 0.9):
+             kv_frac: float = 0.9, fabric=None):
     """PD front + AF-disaggregated decode (as deployed by MegaScale-Infer).
 
     .. deprecated::
@@ -432,7 +438,7 @@ def build_af(cfg: ModelConfig, hw: HardwareSpec, *,
                     expert_cluster_hw=expert_cluster_hw,
                     remote_expert_ranks=tuple(remote_expert_ranks),
                     expert_link=expert_link, memoize=memoize),
-    ])
+    ], fabric=fabric)
     return build_system(cfg, hw, graph, ops=ops, routing=routing,
                         engine=engine,
                         memory=memory, queue_policy=queue_policy, seed=seed,

@@ -28,7 +28,7 @@ def build_colocated(cfg: ModelConfig, hw: HardwareSpec, *,
                     memory=None, queue_policy=None,
                     memoize: bool = True,
                     pipeline=None, transfer_overlap: float = 0.0,
-                    kv_frac: float = 0.9) -> SystemHandle:
+                    kv_frac: float = 0.9, fabric=None) -> SystemHandle:
     """Colocated preset.
 
     .. deprecated::
@@ -41,7 +41,7 @@ def build_colocated(cfg: ModelConfig, hw: HardwareSpec, *,
         ClusterSpec("colocated", "colocated", n_replicas=n_replicas,
                     par=par or ParallelismConfig(tp=1), policy=policy,
                     replica_prefix="colo", memoize=memoize),
-    ])
+    ], fabric=fabric)
     return build_system(cfg, hw, graph, ops=ops, routing=routing,
                         engine=engine, memory=memory,
                         queue_policy=queue_policy, seed=seed,

@@ -31,7 +31,7 @@ def build_pd(cfg: ModelConfig, hw: HardwareSpec, *,
              memory=None, queue_policy=None,
              memoize: bool = True,
              pipeline=None, transfer_overlap: float = 0.0,
-             kv_frac: float = 0.9) -> SystemHandle:
+             kv_frac: float = 0.9, fabric=None) -> SystemHandle:
     """PD-disaggregation preset.
 
     .. deprecated::
@@ -47,7 +47,7 @@ def build_pd(cfg: ModelConfig, hw: HardwareSpec, *,
         ClusterSpec("decode", "decode", n_replicas=n_decode,
                     par=decode_par or ParallelismConfig(tp=1),
                     policy=decode_policy, seed_offset=100, memoize=memoize),
-    ])
+    ], fabric=fabric)
     return build_system(cfg, hw, graph, ops=ops, routing=routing,
                         engine=engine,
                         transfer_bw=transfer_bw, memory=memory,

@@ -271,6 +271,17 @@ class FleetController:
         self.scale_events.append(dict(
             t=t, kind=kind, instance=inst.name, **extra))
 
+    def _replica_rate(self, inst: Instance, w) -> float:
+        """Provisioned $/hr one replica represents (its cluster's per-
+        replica device count times that cluster's hardware price)."""
+        for cluster in inst.handle.clusters.values():
+            if w in cluster.replicas:
+                per = cluster.spec.devices_per_replica() \
+                    if getattr(cluster, "spec", None) is not None else 1
+                return per * getattr(getattr(cluster, "hw", None),
+                                     "dollars_per_hour", 0.0)
+        return 0.0
+
     def scale_up(self, group) -> Instance:
         """Provision one more instance of ``group`` with a modeled cold
         start: per-device weight bytes over the provision bandwidth plus
@@ -283,7 +294,8 @@ class FleetController:
         self.engine.after(cold, EV.INSTANCE_READY,
                           lambda ev, inst=inst: self._instance_ready(inst),
                           instance=inst.name)
-        self._record("scale_up", inst, cold_start_s=cold)
+        self._record("scale_up", inst, cold_start_s=cold,
+                     dollars_per_hour_delta=inst.dollar_rate())
         self._track_peak()
         return inst
 
@@ -296,9 +308,13 @@ class FleetController:
     def scale_down(self, inst: Instance) -> None:
         """Drain: stop routing to ``inst``; it finishes residents and then
         releases its GPUs (``_on_complete`` notices the drain emptying)."""
+        # price the decision when it is made: the drained capacity keeps
+        # burning $ until residents finish, but this is the rate the
+        # autoscaler chose to give up
+        rate = inst.dollar_rate()
         inst.drain(self.engine.now)
         self._non_active += 1
-        self._record("scale_down", inst)
+        self._record("scale_down", inst, dollars_per_hour_delta=-rate)
         if inst.outstanding() == 0:
             inst.stop(self.engine.now)
             self._record("drained", inst)
@@ -329,7 +345,10 @@ class FleetController:
                           EV.POOL_RECONFIGURED, enable,
                           instance=inst.name, role=needy_role)
         self._record("rebalance", inst, moved=f"{donor_role}->{needy_role}",
-                     donor=donor.name, spare=spare.name)
+                     donor=donor.name, spare=spare.name,
+                     dollars_per_hour_delta=(
+                         self._replica_rate(inst, spare)
+                         - self._replica_rate(inst, donor)))
         inst.touch(self.engine.now)
         return True
 

@@ -60,11 +60,14 @@ class Instance:
         self.stopped_at: Optional[float] = None
         self.routed = 0                 # arrivals the global router sent here
         self.has_spares = False         # built with standby P:D replicas
-        # GPU-second integrator (piecewise-constant between touches)
+        # GPU-second integrator (piecewise-constant between touches), plus
+        # the parallel provisioned-$ integrator (per-cluster $/GPU-hr)
         self._t_last = created_at
         self._dev_last = self.provisioned_devices()
+        self._rate_last = self.dollar_rate()
         self.peak_devices = self._dev_last
         self.gpu_seconds = 0.0
+        self.provisioned_dollars = 0.0
 
     # ------------------------------------------------------------- wiring --
     @property
@@ -126,13 +129,33 @@ class Instance:
                     n += per
         return n
 
+    def dollar_rate(self) -> float:
+        """Current provisioned $/hr: held devices weighted by each
+        cluster's hardware pricing (mirrors ``provisioned_devices``)."""
+        if self.state == STOPPED:
+            return 0.0
+        rate = 0.0
+        for cluster in self.handle.clusters.values():
+            per = cluster.spec.devices_per_replica() \
+                if getattr(cluster, "spec", None) is not None else 1
+            dph = getattr(getattr(cluster, "hw", None),
+                          "dollars_per_hour", 0.0)
+            for w in cluster.replicas:
+                if w.active or w.waiting or w.running or w.swapped \
+                        or w._swapping_out or w._swapping_in or w.busy:
+                    rate += per * dph
+        return rate
+
     def touch(self, now: float) -> None:
-        """Advance the GPU-second integral to ``now`` and re-sample the
-        (piecewise-constant) provisioned-device count."""
+        """Advance the GPU-second and provisioned-$ integrals to ``now``
+        and re-sample the (piecewise-constant) provisioned capacity."""
         if now > self._t_last:
-            self.gpu_seconds += self._dev_last * (now - self._t_last)
+            dt = now - self._t_last
+            self.gpu_seconds += self._dev_last * dt
+            self.provisioned_dollars += self._rate_last * dt / 3600.0
             self._t_last = now
         self._dev_last = self.provisioned_devices()
+        self._rate_last = self.dollar_rate()
         if self._dev_last > self.peak_devices:
             self.peak_devices = self._dev_last
 

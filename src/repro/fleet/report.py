@@ -64,6 +64,8 @@ def _instance_block(inst: Instance, spec) -> Dict[str, Any]:
         "outstanding": inst.outstanding(),
         "gpu_seconds": inst.gpu_seconds,
         "busy_gpu_seconds": inst.busy_gpu_seconds(),
+        "provisioned_dollars": inst.provisioned_dollars,
+        "dollars_per_hour": inst.dollar_rate(),
         "summary": summary,
         "clusters": _cluster_breakdown(inst.handle),
         "conservation": ctrl.conservation_check(),
@@ -135,6 +137,13 @@ def run_fleet(spec, *, hardware=None, ops=None,
     kinds = [e["kind"] for e in fc.scale_events]
     gpu_s = sum(i.gpu_seconds for i in insts.values())
     busy_s = sum(i.busy_gpu_seconds() for i in insts.values())
+    # fleet $ accounting: each instance integrates its own provisioned-$
+    # (heterogeneous hardware prices per cluster), so fleet $ == sum of
+    # instance $ by construction — a property test pins this identity
+    dollars = sum(i.provisioned_dollars for i in insts.values())
+    idle_frac = max(gpu_s - busy_s, 0.0) / gpu_s if gpu_s > 0 else 0.0
+    duration = float(summary.get("duration_s") or 0.0)
+    tput = float(summary.get("throughput_tok_s") or 0.0)
     summary.update({
         "fleet_instances_built": len(insts),
         "fleet_instances_active_end": sum(
@@ -145,6 +154,15 @@ def run_fleet(spec, *, hardware=None, ops=None,
         "routing_imbalance": _routing_imbalance(insts),
         "provisioned_gpu_seconds": gpu_s,
         "idle_gpu_seconds": max(gpu_s - busy_s, 0.0),
+        "provisioned_dollars": dollars,
+        # $ paid for capacity that sat idle (idle-GPU-fraction of spend)
+        "idle_dollars": dollars * idle_frac,
+        # time-averaged fleet burn rate over the measured window
+        "dollars_per_hour": (dollars / (duration / 3600.0)
+                             if duration > 0 else 0.0),
+        "tok_per_s_per_dollar": (
+            tput / (dollars / (duration / 3600.0))
+            if duration > 0 and dollars > 0 else None),
     })
     summary["fleet_engine_mode"] = spec.fleet.engine
     if spec.fleet.engine == "windowed":
@@ -176,6 +194,17 @@ def run_fleet(spec, *, hardware=None, ops=None,
         summary["kv_transfer_count"] = transfers["transfers"]
         summary["kv_transfer_serial_s"] = transfers["serial_s"]
         summary["kv_transfer_exposed_s"] = transfers["exposed_s"]
+    # shared-fabric contention, pooled across instances that model one
+    fabrics = [i.handle.fabric for i in insts.values()
+               if getattr(i.handle, "fabric", None) is not None]
+    if fabrics:
+        exposed = sum(f.exposed_comm_s() for f in fabrics)
+        uncontended = sum(f.uncontended_comm_s() for f in fabrics)
+        summary["fabric_transfers"] = sum(f.stats["transfers"]
+                                          for f in fabrics)
+        summary["fabric_exposed_comm_s"] = exposed
+        summary["fabric_uncontended_comm_s"] = uncontended
+        summary["fabric_contention_delay_s"] = exposed - uncontended
     tenants = _tenant_block(spec, merged.completed)
     attains = [t["slo_attainment"] for t in tenants.values()
                if t["slo_attainment"] is not None]

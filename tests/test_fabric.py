@@ -1,0 +1,477 @@
+"""Shared network fabric + $ accounting test suite (PR tentpole pin).
+
+Three layers of coverage:
+
+1. A hand-computed golden fixture for the processor-sharing contention
+   math, pinned to 1e-9 — two overlapping transfers into one uplink on a
+   tiny 3-cluster topology, completion times worked out by hand.
+2. Deterministic end-to-end checks: ``fabric: none`` is bit-identical to
+   the point-to-point path, fabric-on exposes strictly more comm time
+   than the uncontended sum, and the $ metrics satisfy their defining
+   identities (rate = devices x price, fleet $ = sum of instance $,
+   tok/s/$ inversely proportional to price).
+3. A hypothesis property suite (runs where hypothesis is installed, like
+   tests/test_properties.py): bytes conservation over random
+   topologies/flow sets, contention monotonicity (an extra flow never
+   speeds anything up), and oversubscription monotonicity.
+"""
+import math
+
+import pytest
+
+from repro.api import SimSpec, run
+from repro.api.spec import FabricSpec, SpecError, TopologySpec
+from repro.core.engine import SimEngine
+from repro.core.events import EV
+from repro.core.fabric import Fabric, FabricConfig, FabricOps
+from repro.core.hardware import A800_SXM4_80G, H100_SXM, HARDWARE, LinkSpec
+from repro.core.opmodels.analytical import OperatorModelSet
+
+
+# ------------------------------------------------------------- harness --
+def run_fabric(uplinks, transfers, *, oversubscription=1.0, latency_s=0.0):
+    """Drive a bare Fabric: ``transfers`` is [(t_submit, src, dst, nbytes)];
+    returns (fabric, {index: completion_time})."""
+    eng = SimEngine()
+    fab = Fabric(eng, FabricConfig(mode="shared",
+                                   oversubscription=oversubscription,
+                                   latency_s=latency_s))
+    for name, bw in uplinks.items():
+        fab.attach(name, bw)
+    done = {}
+    for i, (t0, src, dst, nb) in enumerate(transfers):
+        def submit(ev, i=i, src=src, dst=dst, nb=nb):
+            fab.start_transfer(
+                src, dst, nb,
+                done=lambda i=i: done.__setitem__(i, eng.now))
+        eng.at(t0, EV.KV_TRANSFER_START, submit)
+    eng.run()
+    return fab, done
+
+
+def pd_spec(**overrides):
+    body = {
+        "name": "fabric-pd",
+        "model": {"name": "qwen2-7b", "smoke": True},
+        "topology": {"preset": "pd", "n_prefill": 1, "n_decode": 2},
+        "workload": {"n_requests": 30, "rate": 25.0, "prompt_mean": 512,
+                     "output_mean": 32, "seed": 7},
+        "seed": 7,
+    }
+    body.update(overrides)
+    return SimSpec.from_dict(body)
+
+
+# ------------------------------------- satellite 1: zero-bandwidth link --
+def test_link_zero_bandwidth_raises():
+    """Regression: bandwidth=0 used to price every transfer as FREE
+    (``latency + nbytes/bw`` with a silent division guard upstream)."""
+    with pytest.raises(ValueError, match="bandwidth must be > 0"):
+        LinkSpec("a", "b", bandwidth=0.0).transfer_time(1e6)
+    with pytest.raises(ValueError, match="bandwidth must be > 0"):
+        LinkSpec("a", "b", bandwidth=-1.0).transfer_time(1e6)
+    # sane links still price normally
+    assert LinkSpec("a", "b", bandwidth=1e9,
+                    latency=1e-3).transfer_time(1e9) == \
+        pytest.approx(1.001)
+
+
+def test_spec_rejects_zero_bandwidth_link():
+    spec = pd_spec(topology={
+        "preset": None,
+        "clusters": [{"name": "p", "role": "prefill"},
+                     {"name": "d", "role": "decode"}],
+        "links": [{"src": "p", "dst": "d", "bandwidth": 0.0}]})
+    with pytest.raises(SpecError, match="must be > 0 bytes/s"):
+        spec.validate()
+
+
+def test_spec_rejects_nonpositive_transfer_bw():
+    spec = pd_spec(topology={"preset": "pd", "transfer_bw": 0.0})
+    with pytest.raises(SpecError, match="transfer_bw"):
+        spec.validate()
+
+
+# --------------------------- satellite 2: hand-computed fixture (1e-9) --
+def test_hand_computed_contention_fixture():
+    """3 clusters (A, B, C), every uplink 100 B/s, oversubscription 1:
+
+    - T1: A->C, 600 B, submitted t=0.  Solo rate 100 B/s.
+    - T2: B->C, 300 B, submitted t=2.  C's rx uplink now carries two
+      flows, so each gets 100/2 = 50 B/s (A's and B's tx sides are solo).
+
+    Timeline: T1 moves 200 B by t=2 (400 left).  Both run at 50 B/s;
+    T2 finishes its 300 B at t = 2 + 300/50 = 8.  T1 moved another
+    300 B by then (100 left), is re-priced back to 100 B/s, and
+    finishes at t = 8 + 100/100 = 9.  Uncontended: 6 s + 3 s.
+    """
+    fab, done = run_fabric(
+        {"A": 100.0, "B": 100.0, "C": 100.0},
+        [(0.0, "A", "C", 600.0),
+         (2.0, "B", "C", 300.0)])
+    assert done[0] == pytest.approx(9.0, abs=1e-9)
+    assert done[1] == pytest.approx(8.0, abs=1e-9)
+    assert fab.stats["bytes"] == pytest.approx(900.0, abs=1e-9)
+    assert fab.stats["transfers"] == 2
+    # exposed spans: (9 - 0) + (8 - 2) = 15; uncontended 600/100 + 300/100
+    assert fab.exposed_comm_s() == pytest.approx(15.0, abs=1e-9)
+    assert fab.uncontended_comm_s() == pytest.approx(9.0, abs=1e-9)
+    assert fab.in_flight() == 0
+
+
+def test_fixture_without_overlap_is_uncontended():
+    """The same two transfers spaced out never contend: each completes in
+    its solo time and exposed == uncontended exactly."""
+    fab, done = run_fabric(
+        {"A": 100.0, "B": 100.0, "C": 100.0},
+        [(0.0, "A", "C", 600.0),
+         (50.0, "B", "C", 300.0)])
+    assert done[0] == pytest.approx(6.0, abs=1e-9)
+    assert done[1] == pytest.approx(53.0, abs=1e-9)
+    assert fab.exposed_comm_s() == pytest.approx(
+        fab.uncontended_comm_s(), abs=1e-9)
+
+
+def test_oversubscription_divides_uplinks():
+    """oversubscription k divides every uplink's effective capacity by k
+    — a solo 600 B transfer over a 100 B/s uplink takes 6k seconds."""
+    for k in (1.0, 2.0, 4.0):
+        _, done = run_fabric({"A": 100.0, "C": 100.0},
+                             [(0.0, "A", "C", 600.0)],
+                             oversubscription=k)
+        assert done[0] == pytest.approx(6.0 * k, abs=1e-9)
+
+
+def test_latency_phase_precedes_bandwidth_phase():
+    fab, done = run_fabric({"A": 100.0, "C": 100.0},
+                           [(0.0, "A", "C", 600.0)], latency_s=0.5)
+    assert done[0] == pytest.approx(6.5, abs=1e-9)
+    assert fab.uncontended_comm_s() == pytest.approx(6.5, abs=1e-9)
+
+
+def test_unattached_endpoints_are_unconstrained():
+    """A flow whose endpoints never attached an uplink (e.g. an external
+    KV source) completes immediately — the fabric only prices what it
+    models."""
+    fab, done = run_fabric({}, [(1.0, "X", "Y", 1e12)])
+    assert done[0] == pytest.approx(1.0, abs=1e-9)
+    assert fab.in_flight() == 0
+
+
+# ------------------------------------- deterministic monotonicity pins --
+def test_added_flow_never_speeds_up_existing():
+    base = [(0.0, "A", "C", 600.0)]
+    _, solo = run_fabric({"A": 100.0, "B": 100.0, "C": 100.0}, base)
+    _, shared = run_fabric({"A": 100.0, "B": 100.0, "C": 100.0},
+                           base + [(2.0, "B", "C", 300.0)])
+    assert shared[0] >= solo[0] - 1e-12
+
+
+def test_raising_oversubscription_never_lowers_completions():
+    ups = {"A": 100.0, "B": 100.0, "C": 100.0}
+    flows = [(0.0, "A", "C", 600.0), (2.0, "B", "C", 300.0),
+             (3.0, "A", "B", 250.0)]
+    prev = None
+    for k in (1.0, 1.5, 2.0, 4.0):
+        _, done = run_fabric(ups, flows, oversubscription=k)
+        if prev is not None:
+            for i in done:
+                assert done[i] >= prev[i] - 1e-12
+        prev = done
+
+
+# ------------------------------------------------- FabricOps collectives --
+def test_base_m2n_is_exactly_p2p():
+    """The base model set's m2n must price exactly as p2p so workflows
+    that switched from p2p to m2n stay bit-identical without a fabric."""
+    ops = OperatorModelSet(A800_SXM4_80G)
+    for nbytes in (1e3, 1e6, 1e9):
+        assert ops.m2n(nbytes, 4, 8) == ops.p2p(nbytes, inter_node=True)
+        assert ops.m2n(nbytes, 4, 8, inter_node=False) == \
+            ops.p2p(nbytes, inter_node=False)
+
+
+def test_fabric_ops_collectives_slower_when_oversubscribed():
+    inner = OperatorModelSet(A800_SXM4_80G)
+    fops = FabricOps(inner, FabricConfig(mode="shared",
+                                         oversubscription=2.0,
+                                         latency_s=5e-6))
+    nbytes = 64e6
+    for n in (2, 4, 8):
+        assert fops.all_reduce(nbytes, n, inter_node=True) > \
+            inner.all_reduce(nbytes, n, inter_node=True)
+        assert fops.all_to_all(nbytes, n, inter_node=True) > \
+            inner.all_to_all(nbytes, n, inter_node=True)
+        assert fops.p2p(nbytes) > inner.p2p(nbytes)
+        assert fops.m2n(nbytes, n, 2 * n) > 0.0
+        # intra-node falls through to the wrapped models untouched
+        assert fops.all_reduce(nbytes, n, inter_node=False) == \
+            inner.all_reduce(nbytes, n, inter_node=False)
+    # compute delegates exactly
+    assert fops.gemm(512, 512, 512) == inner.gemm(512, 512, 512)
+
+
+def test_fabric_ops_tree_vs_ring():
+    cfg = dict(mode="shared", oversubscription=1.0, latency_s=1e-5)
+    inner = OperatorModelSet(A800_SXM4_80G)
+    ring = FabricOps(inner, FabricConfig(collective="ring", **cfg))
+    tree = FabricOps(inner, FabricConfig(collective="tree", **cfg))
+    # both algorithms price positive and differently at n=8
+    r = ring.all_reduce(64e6, 8, inter_node=True)
+    t = tree.all_reduce(64e6, 8, inter_node=True)
+    assert r > 0 and t > 0 and r != t
+
+
+def test_m2n_narrow_side_bottlenecks():
+    fops = FabricOps(OperatorModelSet(A800_SXM4_80G),
+                     FabricConfig(mode="shared"))
+    # widening the narrow side adds lanes -> strictly faster
+    assert fops.m2n(1e9, 2, 8) > fops.m2n(1e9, 4, 8)
+    # widening only the wide side does nothing
+    assert fops.m2n(1e9, 2, 8) == fops.m2n(1e9, 2, 16)
+
+
+# ---------------------------------------- end-to-end: none == baseline --
+def test_fabric_none_bit_identical_to_baseline():
+    base = run(pd_spec())
+    none_str = run(pd_spec(topology={"preset": "pd", "n_prefill": 1,
+                                     "n_decode": 2, "fabric": "none"}))
+    none_map = run(pd_spec(topology={"preset": "pd", "n_prefill": 1,
+                                     "n_decode": 2,
+                                     "fabric": {"mode": "none"}}))
+    assert none_str.summary == base.summary
+    assert none_map.summary == base.summary
+
+
+def test_fabric_shared_exposes_contention_end_to_end():
+    # a burst of arrivals over a slow shared uplink forces KV transfers
+    # to overlap on the decode rx side — that's the contention under test
+    rep = run(pd_spec(
+        topology={"preset": "pd", "n_prefill": 2, "n_decode": 1,
+                  "fabric": {"mode": "shared", "oversubscription": 2.0,
+                             "uplink_bw": 2e7}},
+        workload={"n_requests": 30, "arrival": "burst", "burst_size": 15,
+                  "burst_period": 2.0, "prompt_mean": 512,
+                  "output_mean": 32, "seed": 7}))
+    s = rep.summary
+    assert rep.all_complete
+    assert s["fabric_transfers"] > 0
+    assert s["fabric_exposed_comm_s"] > s["fabric_uncontended_comm_s"]
+    assert s["fabric_contention_delay_s"] > 0
+    # the legacy serial accounting still runs alongside
+    assert s["kv_transfer_count"] == s["fabric_transfers"]
+
+
+def test_fabric_excludes_layer_streamed_transfer():
+    spec = pd_spec(topology={"preset": "pd",
+                             "fabric": {"mode": "shared"}},
+                   memory={"manager": "paged", "transfer_overlap": 0.5})
+    with pytest.raises(SpecError, match="transfer_overlap"):
+        spec.validate()
+
+
+def test_fabric_spec_validation_and_roundtrip():
+    with pytest.raises(SpecError, match="fabric mode"):
+        pd_spec(topology={"preset": "pd",
+                          "fabric": {"mode": "warp"}}).validate()
+    with pytest.raises(SpecError, match="oversubscription"):
+        pd_spec(topology={"preset": "pd",
+                          "fabric": {"mode": "shared",
+                                     "oversubscription": 0}}).validate()
+    with pytest.raises(SpecError, match="collective"):
+        pd_spec(topology={"preset": "pd",
+                          "fabric": {"mode": "shared",
+                                     "collective": "mesh"}}).validate()
+    spec = pd_spec(topology={"preset": "pd", "n_prefill": 1, "n_decode": 2,
+                             "fabric": {"mode": "shared",
+                                        "oversubscription": 1.5,
+                                        "latency_s": 1e-5,
+                                        "collective": "tree"}})
+    spec.validate()
+    assert SimSpec.from_yaml(spec.to_yaml()) == spec
+    assert SimSpec.from_dict(spec.to_dict()) == spec
+    # unset fabric stays out of the serialized form (hash stability)
+    assert "fabric" not in pd_spec().to_dict()["topology"]
+
+
+# ------------------------------------------- satellite 4: $ accounting --
+def test_cost_identities_mixed_hardware():
+    """Hand-computed: H100 prefill (1 dev x $3.90/hr) + A800 decode
+    (1 dev x $1.90/hr) burn $5.80/hr; every derived metric follows."""
+    spec = pd_spec(topology={
+        "preset": None,
+        "clusters": [
+            {"name": "prefill", "role": "prefill",
+             "hardware": "H100-SXM"},
+            {"name": "decode", "role": "decode",
+             "hardware": "A800-SXM4-80G"},
+        ],
+        "links": [{"src": "prefill", "dst": "decode",
+                   "bandwidth": 5e10}]})
+    rep = run(spec)
+    s = rep.summary
+    rate = (H100_SXM.dollars_per_hour + A800_SXM4_80G.dollars_per_hour)
+    assert rate == pytest.approx(5.80)
+    assert s["dollars_per_hour"] == pytest.approx(rate)
+    assert s["provisioned_dollars"] == pytest.approx(
+        rate * s["duration_s"] / 3600.0)
+    assert s["tok_per_s_per_dollar"] == pytest.approx(
+        s["throughput_tok_s"] / rate)
+    assert rep.clusters["prefill"]["cost"]["dollars_per_hour"] == \
+        pytest.approx(H100_SXM.dollars_per_hour)
+    assert rep.clusters["decode"]["cost"]["dollars_per_hour"] == \
+        pytest.approx(A800_SXM4_80G.dollars_per_hour)
+
+
+def test_dollar_override_scales_cost_not_simulation():
+    """topology.dollars_per_hour re-prices hardware without touching the
+    simulation: throughput identical, tok/s/$ exactly inverse in price."""
+    base = run(pd_spec())
+    k = 2.0
+    name = "A800-SXM4-80G"
+    priced = pd_spec(topology={
+        "preset": "pd", "n_prefill": 1, "n_decode": 2,
+        "dollars_per_hour": {name: HARDWARE[name].dollars_per_hour * k}})
+    rep = run(priced)
+    assert rep.summary["throughput_tok_s"] == \
+        base.summary["throughput_tok_s"]
+    assert rep.summary["dollars_per_hour"] == pytest.approx(
+        base.summary["dollars_per_hour"] * k)
+    assert rep.summary["tok_per_s_per_dollar"] == pytest.approx(
+        base.summary["tok_per_s_per_dollar"] / k)
+    # round-trips through YAML with the override intact
+    assert SimSpec.from_yaml(priced.to_yaml()) == priced
+
+
+def test_dollar_override_validation():
+    with pytest.raises(SpecError, match="unknown hardware"):
+        pd_spec(topology={"preset": "pd",
+                          "dollars_per_hour": {"B200": 9.0}}).validate()
+    with pytest.raises(SpecError, match="dollars_per_hour"):
+        pd_spec(topology={
+            "preset": "pd",
+            "dollars_per_hour": {"H100-SXM": -1.0}}).validate()
+
+
+def test_unpriced_hardware_reports_none():
+    spec = pd_spec(topology={"preset": "pd", "n_prefill": 1,
+                             "n_decode": 2,
+                             "dollars_per_hour": {"A800-SXM4-80G": 0.0}})
+    s = run(spec).summary
+    assert s["dollars_per_hour"] == 0.0
+    assert s["provisioned_dollars"] == 0.0
+    assert s["tok_per_s_per_dollar"] is None
+
+
+# --------------------------------------------------- fleet $ accounting --
+FLEET_BODY = {
+    "name": "fabric-fleet",
+    "model": {"name": "qwen2-7b", "smoke": True},
+    "topology": {"preset": "colocated"},
+    "workload": {"n_requests": 80, "rate": 40.0, "rate_curve": "diurnal",
+                 "rate_period": 8.0, "rate_amplitude": 0.7,
+                 "prompt_mean": 256, "output_mean": 32, "seed": 21},
+    "slo": {"ttft_s": 0.5, "tpot_s": 0.05},
+    "fleet": {
+        "instances": [
+            {"name": "colo", "count": 2},
+            {"name": "pd", "count": 1,
+             "topology": {"preset": "pd", "n_prefill": 1,
+                          "n_decode": 1,
+                          "dollars_per_hour": {"A800-SXM4-80G": 3.0}}},
+        ],
+        "autoscaler": {"min_instances": 1, "max_instances": 4,
+                       "interval_s": 0.5, "cooldown_s": 1.0,
+                       "up_queue_depth": 6.0, "down_queue_depth": 1.0},
+    },
+    "seed": 21,
+}
+
+
+def test_fleet_dollars_is_sum_of_instances():
+    from repro.fleet.report import run_fleet
+    rep = run_fleet(SimSpec.from_dict(FLEET_BODY))
+    total = sum(b["provisioned_dollars"] for b in rep.instances.values())
+    assert rep.summary["provisioned_dollars"] == pytest.approx(
+        total, rel=1e-12)
+    assert 0.0 <= rep.summary["idle_dollars"] <= \
+        rep.summary["provisioned_dollars"] + 1e-12
+    assert rep.summary["tok_per_s_per_dollar"] > 0
+    # the pd group's decode/prefill run on re-priced ($3/hr) hardware
+    pd_rates = [b["summary"] for n, b in rep.instances.items()
+                if n.startswith("pd")]
+    assert pd_rates  # the heterogeneous group was actually built
+
+
+def test_scale_events_carry_dollar_deltas():
+    from repro.fleet.report import run_fleet
+    rep = run_fleet(SimSpec.from_dict(FLEET_BODY))
+    ups = [e for e in rep.scale_events if e["kind"] == "scale_up"]
+    downs = [e for e in rep.scale_events if e["kind"] == "scale_down"]
+    assert ups or downs, "autoscaler never acted; retune FLEET_BODY"
+    for e in ups:
+        assert e["dollars_per_hour_delta"] > 0
+    for e in downs:
+        assert e["dollars_per_hour_delta"] < 0
+
+
+# --------------------------------------- satellite 3: hypothesis suite --
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _SETTINGS = dict(max_examples=25, deadline=None)
+    CLUSTERS = ("A", "B", "C", "D")
+
+    uplink_sets = st.fixed_dictionaries(
+        {c: st.floats(min_value=1.0, max_value=1e4, allow_nan=False)
+         for c in CLUSTERS})
+
+    def _flows(min_size=1, max_size=8):
+        one = st.tuples(
+            st.floats(min_value=0.0, max_value=10.0, allow_nan=False),
+            st.sampled_from(CLUSTERS), st.sampled_from(CLUSTERS),
+            st.floats(min_value=1.0, max_value=1e5, allow_nan=False))
+        return st.lists(one, min_size=min_size, max_size=max_size)
+
+    @given(ups=uplink_sets, flows=_flows(),
+           oversub=st.floats(min_value=1.0, max_value=8.0,
+                             allow_nan=False))
+    @settings(**_SETTINGS)
+    def test_bytes_conserved_and_all_complete(ups, flows, oversub):
+        fab, done = run_fabric(ups, flows, oversubscription=oversub)
+        # every flow completed exactly once, none left in flight
+        assert sorted(done) == list(range(len(flows)))
+        assert fab.in_flight() == 0
+        assert fab.stats["transfers"] == len(flows)
+        assert fab.stats["bytes"] == pytest.approx(
+            sum(f[3] for f in flows), rel=1e-12)
+        # no flow beats its solo (uncontended) time, and exposed time
+        # sums to at least the uncontended total
+        for i, (t0, src, dst, nb) in enumerate(flows):
+            solo = min(ups[src], ups[dst]) / oversub
+            assert done[i] >= t0 + nb / solo - 1e-6
+        assert fab.exposed_comm_s() >= fab.uncontended_comm_s() - 1e-6
+
+    @given(ups=uplink_sets, flows=_flows(min_size=2))
+    @settings(**_SETTINGS)
+    def test_extra_flow_is_monotone(ups, flows):
+        """Removing the last flow never delays the survivors."""
+        _, full = run_fabric(ups, flows)
+        _, trimmed = run_fabric(ups, flows[:-1])
+        for i in trimmed:
+            assert full[i] >= trimmed[i] - 1e-6
+
+    @given(ups=uplink_sets, flows=_flows(),
+           k1=st.floats(min_value=1.0, max_value=4.0, allow_nan=False),
+           k2=st.floats(min_value=1.0, max_value=4.0, allow_nan=False))
+    @settings(**_SETTINGS)
+    def test_oversubscription_is_monotone(ups, flows, k1, k2):
+        lo, hi = min(k1, k2), max(k1, k2)
+        _, fast = run_fabric(ups, flows, oversubscription=lo)
+        _, slow = run_fabric(ups, flows, oversubscription=hi)
+        for i in fast:
+            assert slow[i] >= fast[i] - 1e-6

@@ -79,6 +79,22 @@ SPECS = {
         },
         "seed": 15,
     },
+    # the shared network fabric end-to-end: AF disagg whose M2N dispatch
+    # and KV transfers are priced over an oversubscribed shared uplink —
+    # exposed comm must strictly exceed the uncontended sum (contention)
+    "fabric_af": {
+        "name": "golden-fabric-af",
+        "model": {"name": "mixtral-8x7b", "smoke": True},
+        "topology": {"preset": "af", "n_prefill": 1, "n_decode": 1,
+                     "m": 4, "ffn_ep": 4,
+                     "fabric": {"mode": "shared",
+                                "oversubscription": 2.0,
+                                "latency_s": 5e-6}},
+        "workload": {"n_requests": 40, "rate": 20.0, "prompt_mean": 256,
+                     "output_mean": 32, "seed": 13},
+        "pipeline": {"preset": "two_batch", "ep_overlap": 0.5},
+        "seed": 16,
+    },
     # the memory subsystem end-to-end: prefix-caching manager on a
     # shared-prefix workload, layer-wise streamed KV transfer, and a
     # capacity small enough that decode growth preempts (recompute)
@@ -139,6 +155,19 @@ def test_summary_matches_golden(preset):
         f"golden report '{preset}' drifted (>{RTOL:g} rel):\n"
         + "\n".join(drift)
         + "\nIf intentional, re-bless with REPRO_UPDATE_GOLDENS=1")
+
+
+def test_fabric_golden_shows_contention():
+    """The fabric-on golden must expose strictly more comm time than the
+    uncontended sum — oversubscription and overlapping flows cost real
+    simulated time, or the fabric layer is not actually wired in."""
+    path = GOLDEN_DIR / "fabric_af.json"
+    if not path.exists():
+        pytest.skip("goldens not generated yet")
+    s = json.loads(path.read_text())["summary"]
+    assert s["fabric_transfers"] > 0
+    assert s["fabric_exposed_comm_s"] > s["fabric_uncontended_comm_s"]
+    assert s["fabric_contention_delay_s"] > 0
 
 
 def test_goldens_complete_and_valid_json():
