@@ -18,7 +18,7 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.api import SimSpec, run
 
@@ -138,8 +138,29 @@ def _cells(n_cell: int) -> Dict[str, dict]:
     }
 
 
-def run_bench(smoke: bool = False, fleet_1m: bool = False
+def _routing_tag(body: dict) -> str:
+    """Human-readable routing-module tag for a cell body."""
+    r = (body.get("policy") or {}).get("router")
+    if r is None:
+        return "none"
+    if isinstance(r, str):
+        return r
+    if isinstance(r, dict):
+        name = r.get("name", "?")
+        kw = {k: v for k, v in r.items() if k != "name"}
+        if kw:
+            args = ",".join(f"{k}={v}" for k, v in sorted(kw.items()))
+            return f"{name}({args})"
+        return name
+    return type(r).__name__
+
+
+def run_bench(smoke: bool = False, fleet_1m: bool = False,
+              profiles: Optional[Dict[str, str]] = None,
               ) -> Tuple[List[str], dict]:
+    """Run every bench section.  When ``profiles`` is a dict, each Table-1
+    cell additionally runs under cProfile and the top-25 cumulative report
+    is stored there keyed by cell name."""
     lines: List[str] = []
     results: dict = {"smoke": smoke, "cells": {}}
 
@@ -284,24 +305,41 @@ def run_bench(smoke: bool = False, fleet_1m: bool = False
     # ---- Table-1 feature matrix -------------------------------------------
     n_cell = 20 if smoke else 100
     for name, body in _cells(n_cell).items():
-        rep = run(_spec(f"table1-{name}", body))
+        if profiles is not None:
+            import cProfile
+            import io
+            import pstats
+            pr = cProfile.Profile()
+            pr.enable()
+            rep = run(_spec(f"table1-{name}", body))
+            pr.disable()
+            buf = io.StringIO()
+            pstats.Stats(pr, stream=buf).sort_stats(
+                "cumulative").print_stats(25)
+            profiles[name] = buf.getvalue()
+        else:
+            rep = run(_spec(f"table1-{name}", body))
         ok = rep.summary["n_completed"] == n_cell
         results["cells"][name] = {
             "supported": ok, "wall_s": rep.wall_clock_s,
             "events": rep.sim_events,
+            "events_per_s": rep.sim_events / rep.wall_clock_s,
             "tok_s_per_device": rep.summary["throughput_tok_s_per_device"],
             "ttft_p50_s": rep.summary["ttft_p50_s"],
             "preemptions": rep.summary.get("preemptions", 0),
             "prefix_hit_token_frac":
                 rep.summary.get("prefix_hit_token_frac"),
+            "routing": _routing_tag(body),
             "engine_mode": "serial", "predictor_backend": "python",
         }
         ttft = rep.summary["ttft_p50_s"]
         lines.append(
             f"table1_{name},{rep.wall_clock_s * 1e6:.0f},"
             f"supported={'yes' if ok else 'NO'};"
+            f"events_per_s={rep.sim_events / rep.wall_clock_s:,.0f};"
             f"tok_s_dev={rep.summary['throughput_tok_s_per_device']:.1f};"
-            f"ttft_p50={'n/a' if ttft is None else f'{ttft * 1e3:.1f}ms'}")
+            f"ttft_p50={'n/a' if ttft is None else f'{ttft * 1e3:.1f}ms'};"
+            f"routing={_routing_tag(body)}")
     return lines, results
 
 
@@ -337,9 +375,15 @@ if __name__ == "__main__":
     ap.add_argument("--fleet-1m", action="store_true",
                     help="run the full fleet_1m cell (1M requests across "
                          "100 windowed instances; minutes of wall clock)")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile each Table-1 cell (top-25 cumulative "
+                         "per cell) and write the report next to the "
+                         "--json output")
     args = ap.parse_args()
+    profiles: Optional[Dict[str, str]] = {} if args.profile else None
     out_lines, out_results = run_bench(smoke=args.smoke,
-                                       fleet_1m=args.fleet_1m)
+                                       fleet_1m=args.fleet_1m,
+                                       profiles=profiles)
     for l in out_lines:
         print(l)
     if args.json:
@@ -347,6 +391,13 @@ if __name__ == "__main__":
             json.dump(out_results, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {args.json}")
+    if profiles is not None:
+        prof_path = ((args.json + ".profile.txt") if args.json
+                     else "bench_sim_scale.profile.txt")
+        with open(prof_path, "w") as f:
+            for name, text in profiles.items():
+                f.write(f"==== table1_{name} ====\n{text}\n")
+        print(f"wrote {prof_path}")
     if args.trajectory:
         append_trajectory(args.trajectory, args.label, out_results)
         print(f"appended '{args.label}' -> {args.trajectory}")

@@ -7,7 +7,10 @@ Two gate modes, combinable:
   result file against the last entry of the checked-in trajectory
   (repo-root ``BENCH_sim_scale.json``) and exits non-zero if the watched
   cell's ``events_per_s`` dropped more than ``--tolerance`` (default
-  20%) below the baseline.
+  20%) below the baseline.  ``--cell`` accepts a dotted path into the
+  results (``fleet``, ``fabric``, ``cells.af``); for trajectory entries
+  that predate the ``events_per_s`` field it is derived from
+  ``events / wall_s``.
 - fidelity (``--fidelity-results``): compares a fresh calibration entry
   (``python -m repro calibrate --entry-out``) against the checked-in
   ``FIDELITY.json`` trajectory and fails if any operator's fitted MAPE
@@ -28,8 +31,29 @@ COMPARABLE_KEYS = ("n_requests", "instances", "engine_mode",
                    "predictor_backend")
 
 
+def get_cell(entry: dict, cell: str):
+    """Resolve a possibly-dotted cell path (``fleet``, ``cells.af``)."""
+    cur = entry
+    for part in cell.split("."):
+        if not isinstance(cur, dict):
+            return None
+        cur = cur.get(part)
+    return cur if isinstance(cur, dict) else None
+
+
+def cell_events_per_s(c: dict):
+    """events_per_s, derived from events/wall_s for older trajectory
+    entries that predate the field."""
+    if "events_per_s" in c:
+        return c["events_per_s"]
+    ev, wall = c.get("events"), c.get("wall_s")
+    if ev is not None and wall:
+        return ev / wall
+    return None
+
+
 def _cell_cfg(entry: dict, cell: str) -> dict:
-    c = entry.get(cell) or {}
+    c = get_cell(entry, cell) or {}
     cfg = {k: c.get(k) for k in COMPARABLE_KEYS}
     cfg["smoke"] = entry.get("smoke")
     return cfg
@@ -38,8 +62,8 @@ def _cell_cfg(entry: dict, cell: str) -> dict:
 def pick_baseline(trajectory: list, cell: str, fresh_cfg: dict):
     """Most recent comparable entry, else most recent with the cell."""
     with_cell = [e for e in trajectory
-                 if isinstance(e.get(cell), dict)
-                 and "events_per_s" in e[cell]]
+                 if (c := get_cell(e, cell)) is not None
+                 and cell_events_per_s(c) is not None]
     if not with_cell:
         return None, False
     for e in reversed(with_cell):
@@ -94,8 +118,9 @@ def main(argv=None) -> int:
 
     with open(args.results) as f:
         fresh = json.load(f)
-    cell = fresh.get(args.cell)
-    if not isinstance(cell, dict) or "events_per_s" not in cell:
+    cell = get_cell(fresh, args.cell)
+    fresh_eps = cell_events_per_s(cell) if cell is not None else None
+    if fresh_eps is None:
         print(f"gate: results file has no '{args.cell}' cell with "
               f"events_per_s — nothing to gate")
         return 1
@@ -109,8 +134,7 @@ def main(argv=None) -> int:
               f"pass (nothing to compare against)")
         return rc
 
-    base_eps = base[args.cell]["events_per_s"]
-    fresh_eps = cell["events_per_s"]
+    base_eps = cell_events_per_s(get_cell(base, args.cell))
     floor = (1.0 - args.tolerance) * base_eps
     note = "" if comparable else (
         "  [non-comparable config: "

@@ -6,24 +6,36 @@ ruinous for thousands of candidate batches (sweeps, router cache probes,
 bench cells).  This module evaluates the SAME closed-form roofline math
 over whole arrays of ``(q_lens, kv_lens)`` batch shapes at once:
 
-- every roofline operator (GEMM / attention / membound) contributes one
-  ``(flops, bytes)`` row per layer term, vectorized across the B steps;
+- every roofline operator (GEMM / attention / grouped-GEMM / membound)
+  contributes one ``(flops, bytes)`` row per layer term, vectorized
+  across the B steps;
 - per-request attention reductions use one concatenation plus
   ``np.add.reduceat`` instead of B Python loops;
-- the fused cost kernel — ``sum_t mult_t * max(F_t/peak, B_t/bw)`` — runs
-  either in numpy (float64, matches the scalar path to ~1e-12 relative)
-  or, behind the ``jit`` backend flag, as one ``jax.jit``-compiled
-  evaluation (float32 on CPU jax; looser tolerance).
+- MoE layers are first-class: routing draws are made through
+  ``routing.assign`` per ``(step, layer)`` in the *identical call order*
+  as the scalar walk (same ``pred.rng`` sequence), capacity clipping and
+  the per-EP-rank GroupedGEMM straggler ``max()`` are array reductions,
+  and the dispatch/combine all-to-alls are linear terms;
+- the ``numpy`` backend replays the scalar walk's exact term-by-term
+  accumulation order, so per-step totals are **bit-identical** to the
+  Python path (every flop/byte tally is an exact small integer in
+  float64); the ``jit`` backend stacks the roof rows — grouped-GEMM and
+  dense alike — into one cached ``jax.jit`` fused
+  ``sum_t mult_t * max(F_t/peak, B_t/bw)`` kernel (float32 on CPU jax;
+  looser tolerance).
 
-Only the base analytical model vectorizes: MoE layers draw routing
-assignments from the predictor RNG (bit-exact equivalence requires the
-per-step draw order), and refined/subclassed operator models may override
-arbitrary operators.  :func:`supports_vectorized` gates those cases; the
-predictor falls back to the scalar walk per step.
+Only base analytical operator models vectorize: refined/subclassed model
+sets may override arbitrary operators, and predictor subclasses (the AF
+event graph) replace the step walk entirely.  :func:`supports_vectorized`
+gates those cases; the predictor falls back to the scalar walk per step.
+Any :class:`~repro.core.routing.RoutingModule` is supported — stochastic
+routers vectorize via pre-drawn count arrays with the draw sequence
+preserved.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+import math
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,40 +45,105 @@ from repro.core.opmodels.analytical import OperatorModelSet
 #: methods whose analytical closed form the vectorizer replicates; any
 #: override on the installed OperatorModelSet disables vectorization
 _ANALYTICAL_METHODS = ("gemm", "attention_prefill", "attention_decode",
-                       "all_reduce", "all_to_all", "p2p", "membound",
-                       "_roof")
+                       "grouped_gemm", "all_reduce", "all_to_all", "p2p",
+                       "membound", "_roof")
 
 
 def supports_vectorized(pred) -> bool:
-    """True when ``batch_step_totals`` reproduces ``pred.step_time``."""
+    """True when ``batch_step_totals`` reproduces ``pred.step_time``.
+
+    MoE models vectorize for every routing module: the batch path draws
+    ``routing.assign`` per ``(step, layer)`` in the scalar call order, so
+    the ``pred.rng`` sequence — and therefore every count array — is
+    identical to the per-step walk.
+    """
     from repro.core.predictor import ExecutionPredictor
     if type(pred)._step_time_impl is not ExecutionPredictor._step_time_impl:
         return False                      # subclassed step walk (AF events)
-    if pred.cfg.moe is not None:
-        return False                      # RNG-driven expert routing
     ops_t = type(pred.ops)
     return all(getattr(ops_t, m, None) is getattr(OperatorModelSet, m)
                for m in _ANALYTICAL_METHODS)
 
 
+def expert_rank_map(n_experts: int, ep: int) -> np.ndarray:
+    """Expert-index -> EP-rank map matching ``routing.split_by_rank``
+    (contiguous shards; remainder experts spread over the first ranks)."""
+    ep = max(int(ep), 1)
+    base, rem = divmod(int(n_experts), ep)
+    sizes = np.full(ep, base, np.int64)
+    sizes[:rem] += 1
+    return np.repeat(np.arange(ep), sizes)
+
+
+def grouped_gemm_rank_times(ops, rank_sums, rank_groups, d_in: int,
+                            d_out: int, n_mats: int,
+                            dtype_bytes: int = 2) -> np.ndarray:
+    """``[n_mats * ops.grouped_gemm(counts_r, d_in, d_out) for r]`` as one
+    array expression over EP ranks.
+
+    ``rank_sums[r]`` is the token total routed to rank ``r`` and
+    ``rank_groups[r]`` its expert-group count.  Bit-identical to the
+    scalar loop for the base analytical model because every flop/byte
+    tally is an exact integer in float64 (products and sums below 2^53
+    round nowhere).  ``ops`` may also be an array-like of per-rank
+    ``(peak_flops, hbm_bw, op_overhead)`` triples via
+    :func:`rank_hw_arrays` for heterogeneous expert clusters.
+    """
+    s = np.asarray(rank_sums, float)
+    g = np.asarray(rank_groups, float)
+    if isinstance(ops, tuple):
+        peak, hbm, oh = ops
+    else:
+        hw = ops.hw
+        peak, hbm, oh = hw.peak_flops, hw.hbm_bw, hw.op_overhead
+    flops = 2.0 * d_in * d_out * s
+    bytes_ = dtype_bytes * (d_in + d_out) * s + dtype_bytes * d_in * d_out * g
+    return n_mats * (np.maximum(flops / peak, bytes_ / hbm) + oh)
+
+
+def analytic_roofline_hw(ops) -> Optional[Tuple[float, float, float]]:
+    """``(peak_flops, hbm_bw, op_overhead)`` when ``ops`` prices
+    grouped-GEMMs with the base analytical roofline — unwrapping
+    pure-delegating :class:`FabricOps` layers — else None (an overridden
+    grouped_gemm/_roof must be called per rank)."""
+    from repro.core.fabric import FabricOps
+    o = ops
+    while isinstance(o, FabricOps):
+        o = o.inner
+    t = type(o)
+    if (t.grouped_gemm is OperatorModelSet.grouped_gemm
+            and t._roof is OperatorModelSet._roof):
+        return o.hw.peak_flops, o.hw.hbm_bw, o.hw.op_overhead
+    return None
+
+
 class _Terms:
-    """Accumulator translating the scalar ``bd.add`` sequence into roof
-    rows (vectorized max) plus a linear part (collectives, overheads)."""
+    """Ordered term accumulator translating the scalar ``bd.add`` sequence
+    into vectorized rows.
+
+    The ``numpy`` evaluation replays the terms in emission order —
+    ``total += mult * (max(F/peak, B/bw) + oh)`` per roof row, linear
+    terms verbatim — which reproduces the scalar walk's accumulation
+    order exactly.  The ``jit`` evaluation stacks the roof rows into the
+    cached fused kernel (order-free sum; float32 tolerance).
+    """
 
     def __init__(self, B: int, hw):
-        self.F: List[np.ndarray] = []     # roof flops rows, each (B,)
-        self.Bt: List[np.ndarray] = []    # roof bytes rows
-        self.mult: List[float] = []       # per-row multiplier (n_mats etc.)
-        self.lin = np.zeros(B)            # linear terms + op overheads
+        self._seq: List[tuple] = []       # ("roof", F, Bt, mult) | ("lin", a)
         self.hw = hw
         self._b = B
 
     def roof(self, flops, bytes_, mult: float = 1.0) -> None:
-        self.F.append(np.broadcast_to(np.asarray(flops, float), (self._b,)))
-        self.Bt.append(np.broadcast_to(np.asarray(bytes_, float),
-                                       (self._b,)))
-        self.mult.append(mult)
-        self.lin = self.lin + mult * self.hw.op_overhead
+        self._seq.append((
+            "roof",
+            np.broadcast_to(np.asarray(flops, float), (self._b,)),
+            np.broadcast_to(np.asarray(bytes_, float), (self._b,)),
+            mult))
+
+    def lin(self, arr) -> None:
+        self._seq.append(("lin",
+                          np.broadcast_to(np.asarray(arr, float),
+                                          (self._b,))))
 
     def gemm(self, m, n: int, k: int, mult: float = 1.0,
              dtype_bytes: int = 2) -> None:
@@ -82,22 +159,43 @@ class _Terms:
         if n <= 1:
             return
         bw = self.hw.intra_node_bw
-        self.lin = self.lin + (2.0 * np.asarray(nbytes, float)
-                               * (n - 1) / n / bw + self.hw.op_overhead)
+        self.lin(2.0 * np.asarray(nbytes, float) * (n - 1) / n / bw
+                 + self.hw.op_overhead)
+
+    def all_to_all(self, nbytes, n: int) -> None:
+        if n <= 1:
+            return
+        bw = self.hw.intra_node_bw
+        self.lin(np.asarray(nbytes, float) * (n - 1) / n / bw
+                 + self.hw.op_overhead)
 
     def evaluate(self, backend: str) -> np.ndarray:
-        if not self.F:
-            return self.lin.copy()
-        F = np.stack(self.F)
-        Bt = np.stack(self.Bt)
-        mult = np.asarray(self.mult, float)
         hw = self.hw
         if backend == "jit":
-            fn = _fused_kernel(hw.peak_flops, hw.hbm_bw)
-            if fn is not None:
-                return np.asarray(fn(F, Bt, mult), float) + self.lin
-        roofs = np.maximum(F / hw.peak_flops, Bt / hw.hbm_bw)
-        return mult @ roofs + self.lin
+            F = [t[1] for t in self._seq if t[0] == "roof"]
+            if F:
+                fn = _fused_kernel(hw.peak_flops, hw.hbm_bw)
+                if fn is not None:
+                    Bt = np.stack([t[2] for t in self._seq
+                                   if t[0] == "roof"])
+                    mult = np.asarray([t[3] for t in self._seq
+                                       if t[0] == "roof"], float)
+                    out = np.asarray(fn(np.stack(F), Bt, mult), float)
+                    out = out + mult.sum() * hw.op_overhead
+                    for t in self._seq:
+                        if t[0] == "lin":
+                            out = out + t[1]
+                    return out
+        total = np.zeros(self._b)
+        for t in self._seq:
+            if t[0] == "roof":
+                _, F, Bt, mult = t
+                row = np.maximum(F / hw.peak_flops, Bt / hw.hbm_bw) \
+                    + hw.op_overhead
+                total = total + (row if mult == 1.0 else mult * row)
+            else:
+                total = total + t[1]
+        return total
 
 
 _KERNELS = {}
@@ -125,6 +223,51 @@ def _fused_kernel(peak: float, hbm: float):
     return fused
 
 
+def _predraw_moe_rows(pred, toks_int: List[int], n_moe_layers: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-(layer, step) straggler-rank (max flops, max bytes) rows for the
+    MoE GroupedGEMM barrier, with routing draws consumed from ``pred.rng``
+    in the exact scalar order: step-major, layer-minor.
+
+    The reduction exploits ``max_r max(F_r/p, B_r/b) ==
+    max(max_r F_r / p, max_r B_r / b)`` (p, b positive constants), so the
+    per-layer term stays one roofline row.
+    """
+    cfg, par = pred.cfg, pred.par
+    moe = cfg.moe
+    E, top_k = moe.num_experts, moe.top_k
+    ep = max(par.ep, 1)
+    tp_in_expert = max(par.tp // ep, 1)
+    d_in, d_out = cfg.d_model, moe.expert_d_ff // tp_in_expert
+    rank_of = expert_rank_map(E, ep)
+    groups = np.bincount(rank_of, minlength=ep).astype(float)
+    B = len(toks_int)
+    maxF = np.empty((n_moe_layers, B))
+    maxB = np.empty((n_moe_layers, B))
+    stochastic = pred.routing.stochastic
+
+    def rank_rows(toks: int) -> Tuple[float, float]:
+        counts = pred.routing.assign(toks, E, top_k, pred.rng)
+        cap = math.ceil(moe.capacity_factor_eval * toks * top_k / E)
+        kept = np.minimum(counts, cap)
+        s = np.bincount(rank_of, weights=kept, minlength=ep)
+        flops = 2.0 * d_in * d_out * s
+        bytes_ = 2 * (d_in + d_out) * s + 2 * d_in * d_out * groups
+        return float(flops.max()), float(bytes_.max())
+
+    for bi, toks in enumerate(toks_int):
+        if stochastic:
+            for li in range(n_moe_layers):
+                maxF[li, bi], maxB[li, bi] = rank_rows(toks)
+        else:
+            # deterministic routing consumes no draws and depends only on
+            # the token total: one evaluation covers every layer
+            f, b = rank_rows(toks)
+            maxF[:, bi] = f
+            maxB[:, bi] = b
+    return maxF, maxB
+
+
 def batch_step_totals(pred, steps: Sequence[Tuple[Sequence[int],
                                                   Sequence[int]]],
                       *, decode: bool,
@@ -134,7 +277,9 @@ def batch_step_totals(pred, steps: Sequence[Tuple[Sequence[int],
 
     ``steps`` is a sequence of ``(q_lens, kv_lens)`` pairs; returns a
     float64 array of per-step totals in seconds.  Requires
-    ``supports_vectorized(pred)``.
+    ``supports_vectorized(pred)``.  MoE predictors consume routing draws
+    from ``pred.rng`` exactly as the scalar walk would (one ``assign``
+    per attention layer per non-empty step, step-major order).
     """
     cfg, par, hw = pred.cfg, pred.par, pred.ops.hw
     B = len(steps)
@@ -143,6 +288,7 @@ def batch_step_totals(pred, steps: Sequence[Tuple[Sequence[int],
     tp = max(par.tp, 1)
     d, hd = cfg.d_model, cfg.resolved_head_dim
     H, K = cfg.num_heads, cfg.num_kv_heads
+    moe = cfg.moe
 
     lens = np.array([len(q) for q, _ in steps])
     live = lens > 0                       # zero-token steps price to 0.0
@@ -154,6 +300,16 @@ def batch_step_totals(pred, steps: Sequence[Tuple[Sequence[int],
     offs = np.concatenate(([0], np.cumsum(lens[idx])))[:-1]
     n_req = lens[idx].astype(float)
     toks = np.add.reduceat(Q, offs)
+
+    if moe is not None:
+        n_moe_layers = sum(1 for kind in cfg.pattern
+                           if kind in (ATTN_GLOBAL, ATTN_LOCAL))
+        toks_int = [int(sum(steps[i][0])) for i in idx]
+        gg_maxF, gg_maxB = _predraw_moe_rows(pred, toks_int, n_moe_layers)
+        ep = max(par.ep, 1)
+        tp_in_expert = max(par.tp // ep, 1)
+        moe_n_mats = 3 if cfg.gated_mlp else 2
+        a2a_bytes = 2.0 * toks * moe.top_k * d / ep
 
     # per-window attention reductions, computed once and reused per layer
     attn_cache = {}
@@ -175,6 +331,7 @@ def batch_step_totals(pred, steps: Sequence[Tuple[Sequence[int],
 
     t = _Terms(len(idx), hw)
     t.membound(2.0 * toks * d)                                    # embed
+    moe_li = 0
     for kind in cfg.pattern:
         if kind in (ATTN_GLOBAL, ATTN_LOCAL):
             window = cfg.sliding_window if kind == ATTN_LOCAL else 0
@@ -189,9 +346,22 @@ def batch_step_totals(pred, steps: Sequence[Tuple[Sequence[int],
                               + 2.0 * eff_sum * max(K // tp, 1)) * hd)
             t.gemm(toks, d, H * hd // tp)                         # o_gemm
             t.all_reduce(2.0 * toks * d, tp)
-            n_mats = 3 if cfg.gated_mlp else 2                    # dense ffn
-            t.gemm(toks, cfg.d_ff // tp, d, mult=n_mats)
-            t.all_reduce(2.0 * toks * d, tp)
+            if moe is not None:                                   # MoE ffn
+                t.gemm(toks, moe.num_experts, d)                  # gate
+                t.all_to_all(a2a_bytes, ep)                       # dispatch
+                t.roof(gg_maxF[moe_li], gg_maxB[moe_li],
+                       mult=moe_n_mats)                           # straggler
+                t.all_to_all(a2a_bytes, ep)                       # combine
+                if moe.num_shared_experts:
+                    ff = moe.expert_d_ff * moe.num_shared_experts
+                    t.gemm(toks, ff // tp, d, mult=moe_n_mats)
+                if tp_in_expert > 1:
+                    t.all_reduce(2.0 * toks * d, tp_in_expert)
+                moe_li += 1
+            else:
+                n_mats = 3 if cfg.gated_mlp else 2                # dense ffn
+                t.gemm(toks, cfg.d_ff // tp, d, mult=n_mats)
+                t.all_reduce(2.0 * toks * d, tp)
         elif kind == RWKV:
             t.gemm(toks, d // tp, d, mult=5)
             Hh, hs = d // cfg.rwkv_head_size, cfg.rwkv_head_size

@@ -83,7 +83,9 @@ class ExecutionPredictor:
         # call (exact parts breakdown, the default); "numpy"/"jit" price
         # cache-miss steps through the vectorized fused roofline kernel
         # (total only; falls back to python when the model/ops don't
-        # vectorize — MoE routing draws, subclassed operator models)
+        # vectorize — subclassed operator models or step walks.  MoE
+        # models vectorize for every routing module: the batch path
+        # consumes routing draws in the scalar call order)
         self.backend = backend
         self._vec_supported: Optional[bool] = None
         self.rng = np.random.default_rng(seed)
@@ -95,7 +97,14 @@ class ExecutionPredictor:
         self._cache: Optional[OrderedDict] = OrderedDict() if memoize else None
         self._cache_size = cache_size
         self._cache_variants = 8 if self.routing.stochastic else 1
-        self._bucket_calls: Dict[Tuple, int] = {}
+        # rotation counters live in an LRU-bounded map: million-request
+        # runs see unboundedly many distinct shape buckets, and the
+        # counter must not leak one entry per bucket forever
+        self._bucket_calls: "OrderedDict[Tuple, int]" = OrderedDict()
+        self._bucket_calls_cap = max(8 * cache_size, 64)
+        # per-(counts, ep) grouped-GEMM rank pricing memo (MoE hot path)
+        self._gg_cache: OrderedDict = OrderedDict()
+        self._gg_cache_size = max(cache_size // 4, 64)
         self.cache_hits = 0
         self.cache_misses = 0
 
@@ -109,10 +118,19 @@ class ExecutionPredictor:
             # mixed chunked-prefill step: keyed apart from pure steps (the
             # tuple is longer, so mixed keys can never alias pure ones)
             base = base + ("mix", n_prefill)
+        if self._cache_variants == 1:
+            # deterministic routing: no rotation, no counter to maintain
+            return base + (0,)
         # rotate stochastic-routing draws per bucket (not per call, which
-        # would alias with periodic prefill/decode interleavings)
-        n = self._bucket_calls.get(base, 0)
-        self._bucket_calls[base] = n + 1
+        # would alias with periodic prefill/decode interleavings); evict
+        # cold buckets alongside the step cache so the counter stays
+        # bounded (a restarted bucket merely re-enters rotation at 0)
+        calls = self._bucket_calls
+        n = calls.get(base, 0)
+        calls[base] = n + 1
+        calls.move_to_end(base)
+        if len(calls) > self._bucket_calls_cap:
+            calls.popitem(last=False)
         return base + (n % self._cache_variants,)
 
     def _on_cache_hit(self, bd: "StepBreakdown") -> None:
@@ -199,13 +217,9 @@ class ExecutionPredictor:
         bd.add("moe_a2a", ops.all_to_all(a2a_bytes, ep))
         # (4) heterogeneous per-rank GroupedGEMM tasks -> max() barrier
         n_mats = 3 if cfg.gated_mlp else 2
-        per_rank = split_by_rank(kept, ep)
-        times = [
-            n_mats * ops.grouped_gemm(
-                list(rc), cfg.d_model, moe.expert_d_ff // tp_in_expert)
-            for rc in per_rank
-        ]
-        t_max, t_mean = max(times), sum(times) / len(times)
+        t_max, t_mean = self._grouped_gemm_rank_stats(
+            kept, ep, n_mats, cfg.d_model,
+            moe.expert_d_ff // tp_in_expert)
         bd.add("moe_expert_gemm", t_max)
         bd.moe_straggler_excess += t_max - t_mean
         # (5) combine all-to-all + shared experts + TP reduce
@@ -216,6 +230,46 @@ class ExecutionPredictor:
                 toks, ff // max(self.par.tp, 1), cfg.d_model))
         if tp_in_expert > 1:
             bd.add("tp_coll", ops.all_reduce(2.0 * toks * cfg.d_model, tp_in_expert))
+
+    def _grouped_gemm_rank_stats(self, kept: np.ndarray, ep: int,
+                                 n_mats: int, d_in: int,
+                                 d_out: int) -> Tuple[float, float]:
+        """(straggler max, mean) of per-EP-rank GroupedGEMM times.
+
+        Memoized on the exact kept-count histogram — routing draws recur
+        heavily under capacity clipping, and replaying the per-rank walk
+        per miss dominated MoE stepping.  Exact counts in the key keep
+        every cached value bit-identical to an uncached evaluation (the
+        variant-rotation scheme upstream already diversifies the draws
+        feeding this cache).  For the base analytical model the per-rank
+        loop itself collapses to one array expression; overridden
+        grouped_gemm/_roof models keep the scalar loop.
+        """
+        key = (kept.tobytes(), ep, n_mats, d_in, d_out)
+        hit = self._gg_cache.get(key)
+        if hit is not None:
+            self._gg_cache.move_to_end(key)
+            return hit
+        ops = self.ops
+        from repro.core.opmodels.batch import (analytic_roofline_hw,
+                                               expert_rank_map,
+                                               grouped_gemm_rank_times)
+        hw3 = analytic_roofline_hw(ops)
+        if hw3 is not None:
+            rank_of = expert_rank_map(len(kept), ep)
+            sums = np.bincount(rank_of, weights=kept, minlength=ep)
+            groups = np.bincount(rank_of, minlength=ep)
+            times = grouped_gemm_rank_times(
+                hw3, sums, groups, d_in, d_out, n_mats).tolist()
+        else:
+            times = [n_mats * ops.grouped_gemm(list(rc), d_in, d_out)
+                     for rc in split_by_rank(kept, ep)]
+        # python-ordered mean: bit-identical to the historical walk
+        out = (max(times), sum(times) / len(times))
+        self._gg_cache[key] = out
+        if len(self._gg_cache) > self._gg_cache_size:
+            self._gg_cache.popitem(last=False)
+        return out
 
     def _recurrent_layer(self, kind: str, toks: int, bd: StepBreakdown) -> None:
         cfg, ops, tp = self.cfg, self.ops, max(self.par.tp, 1)
@@ -303,11 +357,12 @@ class ExecutionPredictor:
         ``steps`` is a sequence of ``(q_lens, kv_lens)`` pairs; the result
         is ``np.array([self.step_time(q, kv, decode=decode).total ...])``
         evaluated exactly (no memo-cache quantization).  With the
-        ``numpy``/``jit`` backends the whole grid prices through the
-        fused roofline kernel in one shot; the ``python`` backend — and
-        any model the kernel can't reproduce (MoE routing draws,
-        subclassed operator models) — walks the scalar path per step,
-        preserving the RNG draw order.
+        ``numpy``/``jit`` backends the whole grid — MoE included, with
+        routing draws consumed from ``self.rng`` in the scalar call
+        order — prices through the fused roofline kernel in one shot;
+        the ``python`` backend, and any model the kernel can't reproduce
+        (subclassed operator models or step walks), walks the scalar
+        path per step.
         """
         backend = backend or self.backend
         if backend != "python" and self._vectorized_ok():

@@ -42,8 +42,17 @@ class BalancedRouting(RoutingModule):
 class UniformRouting(RoutingModule):
     """Multinomial over uniform expert probabilities (mild imbalance)."""
 
+    _p: Optional[dict] = None   # n_experts -> probability vector (read-only)
+
     def assign(self, n_tokens, n_experts, top_k, rng):
-        return rng.multinomial(n_tokens * top_k, np.full(n_experts, 1.0 / n_experts))
+        cache = self._p
+        if cache is None:
+            cache = self._p = {}   # lazy: subclasses need not call __init__
+        p = cache.get(n_experts)
+        if p is None:
+            p = np.full(n_experts, 1.0 / n_experts)
+            cache[n_experts] = p
+        return rng.multinomial(n_tokens * top_k, p)
 
 
 class ZipfRouting(RoutingModule):
@@ -51,12 +60,21 @@ class ZipfRouting(RoutingModule):
 
     def __init__(self, alpha: float = 1.2):
         self.alpha = alpha
+        self._p_base: dict = {}  # n_experts -> unshuffled rank^-alpha
 
     def assign(self, n_tokens, n_experts, top_k, rng):
-        ranks = np.arange(1, n_experts + 1, dtype=np.float64)
-        p = ranks ** -self.alpha
+        # assign() is the MoE hot path: the power law is deterministic per
+        # n_experts, so only the shuffle + draw touch the rng per call
+        base = self._p_base.get(n_experts)
+        if base is None:
+            ranks = np.arange(1, n_experts + 1, dtype=np.float64)
+            base = ranks ** -self.alpha
+            self._p_base[n_experts] = base
+        p = base.copy()
         rng.shuffle(p)
-        p /= p.sum()
+        # np.add.reduce is ndarray.sum's own reduction (same pairwise
+        # order, bit-identical) minus the method-dispatch wrappers
+        p /= np.add.reduce(p)
         return rng.multinomial(n_tokens * top_k, p)
 
 

@@ -64,6 +64,43 @@ def test_per_rank_events_are_emitted():
     assert all(b > 0 for b in st.rank_busy)
 
 
+def test_virtual_markers_bit_identical_to_traced_event_path():
+    """Golden assertion for the batched event path: running the step with
+    real per-rank marker events (trace mode) and with virtual markers
+    (default) must agree bit-for-bit on every stat — straggler excess,
+    per-rank busy, makespan, event counts."""
+    for kw in ({}, {"routing": ZipfRouting(1.3)},
+               {"remote_ranks": (2, 3),
+                "remote_link": LinkSpec("decode", "experts",
+                                        bandwidth=5e9, latency=20e-6)}):
+        seen = []
+        fast = _step(rng=np.random.default_rng(3), **kw)
+        traced = _step(rng=np.random.default_rng(3), trace=seen.append,
+                       **kw)
+        assert traced.makespan == fast.makespan
+        assert traced.ep_straggler_excess == fast.ep_straggler_excess
+        assert traced.rank_busy == fast.rank_busy
+        assert traced.ep_overlap_hidden == fast.ep_overlap_hidden
+        assert traced.serial_makespan == fast.serial_makespan
+        assert traced.events == fast.events == len(seen)
+
+
+def test_traced_markers_preserve_per_rank_identities():
+    """Trace mode must emit one EXPERT_DISPATCH_DONE and one
+    EXPERT_RANK_DONE per (stage, rank), with the rank id on the event —
+    the identities fabric/cross-cluster accounting relies on."""
+    from repro.core.events import EV
+    ep = 4
+    seen = []
+    _step(m=1, ffn_par=ParallelismConfig(tp=1, ep=ep), trace=seen.append)
+    n_stages = MCFG.num_layers
+    disp = [e for e in seen if e.kind is EV.EXPERT_DISPATCH_DONE]
+    rank = [e for e in seen if e.kind is EV.EXPERT_RANK_DONE]
+    assert len(disp) == len(rank) == n_stages * ep
+    assert sorted({e.data["r"] for e in disp}) == list(range(ep))
+    assert sorted({e.data["r"] for e in rank}) == list(range(ep))
+
+
 def test_ep_straggler_monotone_under_zipf_skew():
     """More skew -> more straggler excess (and balanced ~ zero)."""
     excess = {}

@@ -85,17 +85,123 @@ if HAVE_HYPOTHESIS:
         _assert_matches(pred, steps, decode, "numpy", 1e-9)
 
 
-# ----------------------------------------------------------- fallbacks --
-def test_moe_falls_back_to_exact_python_walk():
-    pred = _pred("mixtral-8x7b", tp=2, backend="numpy", memoize=False)
-    assert not supports_vectorized(pred)     # RNG-driven expert routing
-    steps = [([3, 4], [10, 12]), ([1, 1], [50, 60])]
-    ref_pred = _pred("mixtral-8x7b", tp=2, memoize=False)
+# ------------------------------------------------------- MoE batching --
+def _routers():
+    from repro.core.routing import (BalancedRouting, TraceRouting,
+                                    UniformRouting, ZipfRouting)
+    return {
+        "balanced": BalancedRouting(),
+        "uniform": UniformRouting(),
+        "zipf": ZipfRouting(alpha=1.1),
+        "trace": TraceRouting([3.0, 1.0, 1.0, 2.0]),
+    }
+
+
+def _moe_pred(tp=2, ep=None, backend="python", router=None, seed=0,
+              **moe_over):
+    import dataclasses
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    if moe_over:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, **moe_over))
+    par = ParallelismConfig(tp=tp, ep=ep if ep is not None else tp)
+    return ExecutionPredictor(cfg, par, H100_SXM,
+                              AnalyticalModels(H100_SXM), backend=backend,
+                              routing=router, seed=seed, memoize=False)
+
+
+MOE_STEPS = [([3, 4], [10, 12]), ([1, 1], [50, 60]), ([], []),
+             ([17], [400]), ([1] * 6, [64] * 6)]
+
+
+@pytest.mark.parametrize("router", ["balanced", "uniform", "zipf", "trace"])
+@pytest.mark.parametrize("decode", [False, True])
+def test_moe_numpy_batch_bit_identical_to_scalar_walk(router, decode):
+    vec = _moe_pred(backend="numpy", router=_routers()[router])
+    assert supports_vectorized(vec)          # the MoE gate is lifted
+    ref_pred = _moe_pred(router=_routers()[router])
+    ref = np.array([ref_pred._step_time_impl(list(q), list(kv),
+                                             decode=decode).total
+                    for q, kv in MOE_STEPS])
+    got = vec.step_time_batch(MOE_STEPS, decode=decode, backend="numpy")
+    np.testing.assert_array_equal(got, ref)  # bit-for-bit, same RNG order
+
+
+def test_moe_jit_batch_matches_scalar_closely():
+    pytest.importorskip("jax")
+    vec = _moe_pred(backend="jit", router=_routers()["zipf"])
+    ref_pred = _moe_pred(router=_routers()["zipf"])
     ref = np.array([ref_pred._step_time_impl(list(q), list(kv),
                                              decode=True).total
-                    for q, kv in steps])
-    got = pred.step_time_batch(steps, decode=True)
-    np.testing.assert_array_equal(got, ref)  # same RNG draw order
+                    for q, kv in MOE_STEPS])
+    got = vec.step_time_batch(MOE_STEPS, decode=True, backend="jit")
+    rel = np.abs(got - ref) / np.maximum(np.abs(ref), 1e-30)
+    rel[ref == 0] = np.abs(got[ref == 0])
+    assert rel.max() <= 1e-6
+
+
+def test_moe_batch_preserves_rng_draw_order():
+    """Pinned draw-order exactness: the batched path must consume
+    ``routing.assign`` with the identical (n_tokens, call-index) sequence
+    as the scalar walk, leaving the generator in the identical state."""
+    from repro.core.routing import UniformRouting
+
+    class LoggingRouter(UniformRouting):
+        def __init__(self):
+            self.calls = []
+
+        def assign(self, n_tokens, n_experts, top_k, rng):
+            self.calls.append((n_tokens, n_experts, top_k))
+            return super().assign(n_tokens, n_experts, top_k, rng)
+
+    ra, rb = LoggingRouter(), LoggingRouter()
+    vec = _moe_pred(backend="numpy", router=ra)
+    ref = _moe_pred(router=rb)
+    for q, kv in MOE_STEPS:
+        ref._step_time_impl(list(q), list(kv), decode=True)
+    vec.step_time_batch(MOE_STEPS, decode=True, backend="numpy")
+    assert ra.calls == rb.calls              # same sequence, same order
+    # generators advanced identically: next draws coincide bit-for-bit
+    np.testing.assert_array_equal(vec.rng.integers(0, 2**31, 8),
+                                  ref.rng.integers(0, 2**31, 8))
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.sampled_from([4, 5, 8, 64]),          # num_experts
+           st.sampled_from([1, 2, 4]),              # top_k
+           st.sampled_from([1, 2, 4, 8]),           # ep
+           st.sampled_from([1.0, 1.25, 2.0, 16.0]),  # capacity factor
+           st.sampled_from(["balanced", "uniform", "zipf", "trace"]),
+           st.lists(st.tuples(st.integers(1, 9), st.integers(1, 300)),
+                    min_size=1, max_size=5),
+           st.booleans())
+    @settings(max_examples=60, deadline=None)
+    def test_moe_batch_matches_scalar_property(E, k, ep, cap, router,
+                                               shapes, decode):
+        router_kw = dict(_routers())
+        from repro.core.routing import TraceRouting
+        router_kw["trace"] = TraceRouting(np.arange(1.0, E + 1.0))
+        steps = [([q] * n, [q + 50] * n) for n, q in shapes]
+        if decode:
+            steps = [([1] * len(q), kv) for q, kv in steps]
+        kw = dict(tp=ep, ep=ep, num_experts=E, top_k=min(k, E),
+                  capacity_factor_eval=cap)
+        vec = _moe_pred(backend="numpy", router=router_kw[router], **kw)
+        ref_pred = _moe_pred(router=router_kw[router], **kw)
+        ref = np.array([ref_pred._step_time_impl(list(q), list(kv),
+                                                 decode=decode).total
+                        for q, kv in steps])
+        got = vec.step_time_batch(steps, decode=decode, backend="numpy")
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_moe_numpy_backend_no_longer_falls_back():
+    pred = _pred("mixtral-8x7b", tp=2, backend="numpy", memoize=False)
+    assert supports_vectorized(pred)
+    assert pred._vectorized_ok()
+
+
+# ----------------------------------------------------------- fallbacks --
 
 
 def test_overridden_ops_disable_vectorization():
@@ -136,6 +242,33 @@ def test_cache_hit_miss_counters_and_lru_eviction():
     pred.step_time(*shapes[0], decode=False)     # evicted: miss again
     assert pred.cache_misses == 4
     assert len(pred._cache) == 2
+
+
+def test_bucket_call_counters_stay_bounded():
+    """The stochastic-router rotation counters must be evicted alongside
+    the LRU step cache — fleet runs see unboundedly many shape buckets."""
+    from repro.core.routing import UniformRouting
+    pred = _pred("qwen3-8b", cache_size=4, routing=UniformRouting())
+    cap = pred._bucket_calls_cap
+    for n in range(1, cap + 200):        # distinct buckets galore
+        pred.step_time([n], [n], decode=False)
+    assert len(pred._bucket_calls) <= cap
+    # deterministic routing keeps no counters at all
+    det = _pred("qwen3-8b", cache_size=4)
+    for n in range(1, 50):
+        det.step_time([n], [n], decode=False)
+    assert len(det._bucket_calls) == 0
+
+
+def test_grouped_gemm_rank_stats_cache_is_exact_and_bounded():
+    pred = _moe_pred()
+    uncached = _moe_pred()
+    uncached._gg_cache_size = 0          # force recomputation every call
+    for q, kv in [([5, 5], [30, 30])] * 3 + [([9], [99])]:
+        a = pred._step_time_impl(list(q), list(kv), decode=True).total
+        b = uncached._step_time_impl(list(q), list(kv), decode=True).total
+        assert a == b                    # memo hit bit-identical to miss
+    assert len(pred._gg_cache) <= pred._gg_cache_size
 
 
 def test_report_surfaces_predictor_cache_stats():
