@@ -95,6 +95,15 @@ def _cells(n_cell: int) -> Dict[str, dict]:
             "topology": {"preset": "af", "m": 2, "attn_tp": 2, "ffn_ep": 8},
             "policy": {"router": {"name": "zipf", "alpha": 1.1}},
             "workload": wl},
+        # the AF cell again with full observability on (spans + counters +
+        # per-EP-rank spans): measures the *enabled*-mode cost; the
+        # obs-off hot path is gated separately (cells.af vs trajectory)
+        "af_traced": {
+            "model": moe,
+            "topology": {"preset": "af", "m": 2, "attn_tp": 2, "ffn_ep": 8},
+            "policy": {"router": {"name": "zipf", "alpha": 1.1}},
+            "obs": {"enabled": True, "ep_spans": True},
+            "workload": wl},
         "af_cross_cluster_ep": {
             "model": moe,
             "topology": {"preset": "af", "m": 2, "attn_tp": 2, "ffn_ep": 8,

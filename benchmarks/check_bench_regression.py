@@ -15,6 +15,13 @@ Two gate modes, combinable:
   (``python -m repro calibrate --entry-out``) against the checked-in
   ``FIDELITY.json`` trajectory and fails if any operator's fitted MAPE
   grew more than ``--fidelity-tolerance`` (default 20%, relative).
+- overhead (``--overhead-against``): compares ``--cell`` against a
+  *sibling* cell within the same fresh results file — no trajectory
+  involved — and fails if it is more than ``--max-overhead`` slower
+  (fractional events/s drop).  Used to bound the cost of opt-in
+  features, e.g. ``--cell cells.af_traced --overhead-against cells.af``
+  bounds full observability (spans + counters + EP-rank spans) relative
+  to the identical untraced run.
 
 Baseline selection prefers the most recent trajectory entry measured
 under a comparable configuration; if none matches it falls back to the
@@ -104,6 +111,13 @@ def main(argv=None) -> int:
                     help="checked-in fidelity trajectory file")
     ap.add_argument("--fidelity-tolerance", type=float, default=0.2,
                     help="max allowed relative fitted-MAPE increase")
+    ap.add_argument("--overhead-against", default=None, metavar="CELL",
+                    help="compare --cell against this sibling cell inside "
+                         "the same fresh results (overhead gate; skips "
+                         "the trajectory comparison)")
+    ap.add_argument("--max-overhead", type=float, default=0.9,
+                    help="max allowed fractional events_per_s drop of "
+                         "--cell relative to --overhead-against")
     args = ap.parse_args(argv)
 
     if args.results is None and args.fidelity_results is None:
@@ -124,6 +138,28 @@ def main(argv=None) -> int:
         print(f"gate: results file has no '{args.cell}' cell with "
               f"events_per_s — nothing to gate")
         return 1
+
+    if args.overhead_against is not None:
+        against = get_cell(fresh, args.overhead_against)
+        against_eps = (cell_events_per_s(against)
+                       if against is not None else None)
+        if against_eps is None:
+            print(f"gate: results file has no '{args.overhead_against}' "
+                  f"cell with events_per_s — nothing to compare against")
+            return 1
+        floor = (1.0 - args.max_overhead) * against_eps
+        drop = 1.0 - fresh_eps / against_eps
+        print(f"gate: overhead {args.cell} {fresh_eps:,.0f} ev/s vs "
+              f"{args.overhead_against} {against_eps:,.0f} ev/s "
+              f"(drop {drop:.1%}, floor {floor:,.0f}, "
+              f"max {args.max_overhead:.0%})")
+        if fresh_eps < floor:
+            print(f"gate: FAIL — {args.cell} is {drop:.1%} slower than "
+                  f"{args.overhead_against} "
+                  f"(> {args.max_overhead:.0%} allowed)")
+            return 1
+        print("gate: OK")
+        return rc
 
     with open(args.trajectory) as f:
         traj = json.load(f).get("trajectory", [])

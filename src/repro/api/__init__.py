@@ -12,8 +12,8 @@ This package is the public surface of the simulator:
 from repro.api.run import Report, build, run  # noqa: F401
 from repro.api.spec import (  # noqa: F401
     AutoscalerSpec, FaultSpec, FleetSpec, InstanceSpec, MemorySpec,
-    ModelRef, OpModelSpec, PipelineSpec, PolicySpec, SimSpec, SLOSpec,
-    SpecError, TenantSpec, TopologySpec, WorkloadSpec,
+    ModelRef, ObsSpec, OpModelSpec, PipelineSpec, PolicySpec, SimSpec,
+    SLOSpec, SpecError, TenantSpec, TopologySpec, WorkloadSpec,
 )
 from repro.api.sweep import best_under_slo, expand, pareto, sweep  # noqa: F401
 
@@ -21,7 +21,7 @@ __all__ = [
     "SimSpec", "ModelRef", "TopologySpec", "WorkloadSpec", "PolicySpec",
     "OpModelSpec", "PipelineSpec", "MemorySpec", "SLOSpec", "FaultSpec",
     "FleetSpec", "InstanceSpec", "TenantSpec", "AutoscalerSpec",
-    "SpecError",
+    "ObsSpec", "SpecError",
     "run", "build", "Report",
     "sweep", "expand", "pareto", "best_under_slo",
 ]

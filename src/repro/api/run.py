@@ -277,7 +277,8 @@ def predictor_cache_stats(handle: SystemHandle) -> Dict[str, Any]:
 def run(spec: SimSpec, *,
         hardware: Optional[HardwareSpec] = None,
         ops=None,
-        engine_overhead: Optional[float] = None) -> Report:
+        engine_overhead: Optional[float] = None,
+        telemetry=None) -> Report:
     """Validate, build, and run one experiment; return its Report.
 
     Same spec + same seed is bit-deterministic: the event engine orders
@@ -287,13 +288,25 @@ def run(spec: SimSpec, *,
     A spec with a ``fleet`` section dispatches to the fleet control plane
     and returns a :class:`repro.fleet.FleetReport` (same surface:
     ``summary`` / ``spec_hash`` / ``save`` / item access).
+
+    ``telemetry`` injects an externally owned :class:`repro.obs.Telemetry`
+    recorder (how ``run_traced`` keeps the spans after the run); with the
+    default ``None``, a recorder is created internally iff ``spec.obs``
+    is enabled.  Obs-off runs never touch the recorder paths.
     """
     if spec.fleet is not None:
         from repro.fleet import run_fleet
         return run_fleet(spec, hardware=hardware, ops=ops,
-                         engine_overhead=engine_overhead)
+                         engine_overhead=engine_overhead,
+                         telemetry=telemetry)
+    if telemetry is None and spec.obs is not None and spec.obs.enabled:
+        from repro.obs import Telemetry
+        telemetry = Telemetry.from_spec(spec.obs)
     t0 = time.perf_counter()
     handle = build(spec, hardware=hardware, ops=ops)
+    if telemetry is not None:
+        from repro.obs import attach_telemetry
+        attach_telemetry(handle, telemetry)
     if engine_overhead is not None:
         for cluster in handle.clusters.values():
             for w in cluster.replicas:
@@ -363,6 +376,8 @@ def run(spec: SimSpec, *,
         summary["fabric_exposed_comm_s"] = exposed
         summary["fabric_uncontended_comm_s"] = uncontended
         summary["fabric_contention_delay_s"] = exposed - uncontended
+    if telemetry is not None:
+        summary.update(telemetry.summary_fields())
     return Report(
         name=spec.name,
         spec=spec.to_dict(),

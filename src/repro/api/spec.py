@@ -750,6 +750,51 @@ class FaultSpec:
                             f"got {self.slowdown}")
 
 
+# ------------------------------------------------------------------ obs ----
+@dataclass
+class ObsSpec:
+    """Observability (see ``repro.obs``): request spans, sim-time
+    counters, and trace export.
+
+    Off unless the spec carries this section (``obs: {}`` enables
+    everything but EP spans).  ``ep_spans`` additionally records the
+    per-EP-rank dispatch/rank/combine markers of AF decode steps by
+    running cache-miss steps through the traced inner engine
+    (bit-identical timings, slower stepping).  ``max_spans`` /
+    ``max_counter_points`` bound recorder memory: beyond the span cap
+    new spans are counted as dropped, and counter series are windowed
+    down by merging adjacent samples.
+    """
+    enabled: bool = True
+    spans: bool = True
+    counters: bool = True
+    ep_spans: bool = False
+    max_spans: int = 500_000
+    max_counter_points: int = 4096
+    top_n: int = 5                 # summary sink: top-N slowest requests
+
+    def __post_init__(self) -> None:
+        _coerce(self, int, "max_spans", "max_counter_points", "top_n")
+
+    def validate(self) -> None:
+        if self.max_spans < 0:
+            raise SpecError(f"obs.max_spans: must be >= 0, "
+                            f"got {self.max_spans}")
+        if self.max_counter_points < 2:
+            raise SpecError(f"obs.max_counter_points: must be >= 2, "
+                            f"got {self.max_counter_points}")
+        if self.top_n < 1:
+            raise SpecError(f"obs.top_n: must be >= 1, got {self.top_n}")
+
+    @classmethod
+    def parse(cls, data: Any) -> Optional["ObsSpec"]:
+        """``obs: true`` / ``obs: off`` booleans are accepted as YAML
+        shorthand for the default-enabled / absent section."""
+        if isinstance(data, bool):
+            return cls() if data else None
+        return _from_mapping(cls, data, "obs")
+
+
 # ---------------------------------------------------------------- fleet ----
 @dataclass
 class InstanceSpec:
@@ -985,6 +1030,7 @@ class SimSpec:
     slo: Optional[SLOSpec] = None
     faults: List[FaultSpec] = field(default_factory=list)
     fleet: Optional[FleetSpec] = None
+    obs: Optional[ObsSpec] = None   # observability; None -> fully off
     seed: int = 0
     until: Optional[float] = None   # sim horizon (s); None -> completion
     name: str = ""
@@ -1018,6 +1064,8 @@ class SimSpec:
                     "fabric contention — set one of them to its default")
         if self.slo is not None:
             self.slo.validate()
+        if self.obs is not None:
+            self.obs.validate()
         if self.fleet is not None:
             self.fleet.validate(self.topology)
             if self.workload.arrival == "closed":
@@ -1090,6 +1138,9 @@ class SimSpec:
                 for k in ("fabric", "dollars_per_hour"):
                     if it.get(k) is None:
                         it.pop(k, None)
+        # observability off must hash/serialize exactly like pre-obs specs
+        if d.get("obs") is None:
+            d.pop("obs", None)
         return d
 
     @classmethod
@@ -1125,6 +1176,7 @@ class SimSpec:
             faults=[_from_mapping(FaultSpec, f, f"faults[{i}]")
                     for i, f in enumerate(d.get("faults") or [])],
             fleet=FleetSpec.parse(d.get("fleet")),
+            obs=ObsSpec.parse(d.get("obs")),
             seed=int(d.get("seed", 0)),
             until=d.get("until"),
             name=d.get("name", ""))
@@ -1184,9 +1236,12 @@ def set_path(d: Dict[str, Any], path: str, value: Any) -> None:
     a bare field name (``tp``) is searched in the spec root, then in
     topology / workload / policy."""
     parts = path.split(".")
-    if len(parts) == 1 and parts[0] not in d:
+    if len(parts) == 1 and parts[0] not in d \
+            and parts[0] not in {f.name for f in fields(SimSpec)}:
+        # (a real SimSpec field absent from the dict is an UNSET optional
+        # section — to_dict strips those — so it is still a top-level set)
         for section in ("topology", "workload", "policy", "pipeline",
-                        "memory", "fleet"):
+                        "memory", "fleet", "obs"):
             sub = d.get(section)
             if isinstance(sub, Mapping) and parts[0] in sub:
                 parts = [section, parts[0]]

@@ -66,6 +66,13 @@ class ReplicaWorker:
         self.cluster: Optional["ClusterWorker"] = None
         self.stats = {"batches": 0, "busy_time": 0.0, "tokens": 0,
                       "prefill_tokens": 0}
+        # observability recorder (repro.obs.Telemetry); None = fully off —
+        # every instrumentation site below guards on it, so untraced runs
+        # execute the exact pre-observability path.  tel_name is the
+        # fleet-unique identity ("<instance>/<name>") attach_telemetry
+        # assigns — plain replica names repeat across fleet instances
+        self.telemetry = None
+        self.tel_name = name
 
     # ------------------------------------------------------------- intake --
     def enqueue_prefill(self, r: Request) -> None:
@@ -95,6 +102,12 @@ class ReplicaWorker:
         if plan.empty:
             return
         self.busy = True
+        tel = self.telemetry
+        if tel is not None:
+            # anchor for traced AF decode steps: inner-engine marker
+            # events are step-relative, the recorder adds this base
+            tel.begin_batch(self.tel_name, self.engine.now)
+        piggyback = False
         if (self.pipeline is not None and self.pipeline.chunked_prefill
                 and plan.prefill and plan.decode):
             # chunked prefill with piggybacked decode: the mixed batch is
@@ -109,6 +122,7 @@ class ReplicaWorker:
                                           n_prefill=len(plan.prefill))
             self.stats["piggyback_tokens"] = (
                 self.stats.get("piggyback_tokens", 0) + len(plan.decode))
+            piggyback = True
         else:
             bd = self.predictor.step_time(plan.q_lens, plan.kv_lens,
                                           decode=(not plan.prefill))
@@ -125,6 +139,33 @@ class ReplicaWorker:
         for r in plan.decode:
             if r.state == RState.QUEUED_DECODE:
                 r.to(RState.DECODING, self.engine.now)
+        if tel is not None:
+            now = self.engine.now
+            for r, chunk in plan.prefill:
+                # progress is pre-chunk: a cache hit shows up as a
+                # nonzero first-chunk progress (prefix tokens skipped)
+                tel.span("prefill_chunk", r.rid, now, now + t,
+                         replica=self.tel_name, chunk=chunk,
+                         progress=r.prefill_progress,
+                         total=r.prefill_total, piggyback=piggyback)
+            for r in plan.decode:
+                tel.compute_span("decode", r.rid, now, now + t,
+                                 self.tel_name)
+            tel.counter(f"batch_occupancy/{self.name}", now,
+                        len(plan.prefill) + len(plan.decode),
+                        replica=self.tel_name)
+            if self.memory is not None:
+                tel.counter(f"kv_used_blocks/{self.name}", now,
+                            self.memory.total_blocks
+                            - self.memory.free_blocks,
+                            replica=self.tel_name)
+                tel.counter(f"kv_cached_blocks/{self.name}", now,
+                            self.memory.cached_blocks(),
+                            replica=self.tel_name)
+            straggle = bd.parts.get("ep_straggler_excess")
+            if straggle is not None:
+                tel.counter(f"ep_straggler_excess_s/{self.name}", now,
+                            straggle, replica=self.tel_name)
         self.engine.after(t, EV.BATCH_DONE,
                           lambda ev, epoch=self._epoch:
                           self._batch_done(plan, epoch),
@@ -248,12 +289,20 @@ class ReplicaWorker:
         r.to(RState.PREEMPTED, now)
         r.preemptions += 1
         self.stats["preemptions"] = self.stats.get("preemptions", 0) + 1
+        if self.telemetry is not None:
+            self.telemetry.span("preempt", r.rid, now, now,
+                                replica=self.tel_name,
+                                mode="swap" if swap else "recompute")
         if swap:
             dt = self.memory.swap_time(r.context_len)
             self.stats["swap_outs"] = self.stats.get("swap_outs", 0) + 1
             self.stats["swap_time_s"] = \
                 self.stats.get("swap_time_s", 0.0) + dt
             self._swapping_out.append(r)
+            if self.telemetry is not None:
+                self.telemetry.span("swap_out", r.rid, now, now + dt,
+                                    replica=self.tel_name,
+                                    tokens=r.context_len)
             self.engine.after(dt, EV.SWAP_OUT_DONE,
                               lambda ev, r=r, epoch=self._epoch:
                               self._swap_out_done(r, epoch),
@@ -282,6 +331,11 @@ class ReplicaWorker:
                 self.stats["swap_time_s"] = \
                     self.stats.get("swap_time_s", 0.0) + dt
                 self._swapping_in.append(r)
+                if self.telemetry is not None:
+                    self.telemetry.span(
+                        "swap_in", r.rid, self.engine.now,
+                        self.engine.now + dt, replica=self.tel_name,
+                        tokens=r.context_len)
                 self.engine.after(dt, EV.SWAP_IN_DONE,
                                   lambda ev, r=r, epoch=self._epoch:
                                   self._swap_in_done(r, epoch),

@@ -69,6 +69,9 @@ class GlobalController:
         # global routers read.
         self.observer: Optional[Callable[[Request, ReplicaWorker], None]] = None
         self.completed_count = 0
+        # observability recorder (repro.obs.Telemetry); None = fully off
+        self.telemetry = None
+        self.tel_instance = ""      # fleet instance label for span identity
 
     # ------------------------------------------------------------- wiring --
     def hooks(self) -> Hooks:
@@ -247,10 +250,18 @@ class GlobalController:
                 self.fabric.start_transfer(
                     src_name, target_cluster.name, nbytes, cap=cap,
                     latency=lat,
-                    done=lambda r=r, tgt=target, t0=t0:
-                        self._fabric_transfer_done(r, tgt, t0))
+                    done=lambda r=r, tgt=target, t0=t0, serial=serial,
+                    nb=nbytes: self._fabric_transfer_done(r, tgt, t0,
+                                                          serial, nb))
             else:
                 self.transfer_stats["exposed_s"] += dt
+                if self.telemetry is not None:
+                    now = self.engine.now
+                    self.telemetry.span(
+                        "kv_transfer", r.rid, now, now + dt,
+                        replica=target.tel_name, bytes=nbytes,
+                        exposed_s=dt, serial_s=serial,
+                        hidden_s=max(serial - dt, 0.0))
                 self.engine.after(
                     dt, EV.KV_TRANSFER_DONE,
                     lambda ev, r=r, tgt=target: self._transfer_done(r, tgt),
@@ -258,8 +269,17 @@ class GlobalController:
         self.pending_transfer = remaining
 
     def _fabric_transfer_done(self, r: Request, target: ReplicaWorker,
-                              t0: float) -> None:
+                              t0: float, serial: float = 0.0,
+                              nbytes: float = 0.0) -> None:
         self.transfer_stats["exposed_s"] += self.engine.now - t0
+        if self.telemetry is not None:
+            # under contention the uncontended point-to-point time is the
+            # floor (serial_s); the span's extent is actual occupancy
+            self.telemetry.span(
+                "kv_transfer", r.rid, t0, self.engine.now,
+                replica=target.tel_name, bytes=nbytes,
+                exposed_s=self.engine.now - t0, serial_s=serial,
+                contended=True)
         self._transfer_done(r, target)
 
     def _transfer_done(self, r: Request, target: ReplicaWorker) -> None:
@@ -275,12 +295,18 @@ class GlobalController:
         """Recompute restore: the request re-enters prefill at the least
         loaded entry cluster (its KV is gone; swap restores stay local to
         the replica and never reach this hook)."""
+        if self.telemetry is not None:
+            self.telemetry.span("recompute_requeue", r.rid,
+                                self.engine.now, self.engine.now,
+                                replica=replica.tel_name)
         self._arrive(r)
 
     # ------------------------------------------------------------- endings --
     def on_request_complete(self, r: Request, replica: ReplicaWorker) -> None:
         self.metrics.on_complete(r, replica)
         self.completed_count += 1
+        if self.telemetry is not None:
+            self.telemetry.end_request(r, instance=self.tel_instance)
         if self.observer is not None:
             self.observer(r, replica)
         if self._closed_queue:      # closed loop: a slot just freed

@@ -109,6 +109,8 @@ class Fabric:
         self.stats = {"transfers": 0, "bytes": 0.0,
                       "uncontended_s": 0.0, "actual_s": 0.0,
                       "collective_s": 0.0, "collective_uncontended_s": 0.0}
+        # observability recorder (repro.obs.Telemetry); None = fully off
+        self.telemetry = None
 
     # ------------------------------------------------------------ topology --
     def attach(self, cluster: str, uplink_bw: float) -> None:
@@ -203,6 +205,21 @@ class Fabric:
                 self.engine.after(
                     eta, EV.FABRIC_TRANSFER_DONE,
                     lambda ev, ff=f, ep=f.epoch: self._maybe_finish(ff, ep))
+        if self.telemetry is not None:
+            # sampled at every repricing event: per-uplink concurrent
+            # flows and the resulting effective per-flow bandwidth
+            now = self.engine.now
+            for cl, n in sorted(n_tx.items()):
+                self.telemetry.counter(f"fabric_tx_flows/{cl}", now, n)
+                cap = self.capacity(cl)
+                if cap < math.inf:
+                    self.telemetry.counter(
+                        f"fabric_tx_eff_bw_gbps/{cl}", now,
+                        cap / max(n, 1) / 1e9)
+            for cl, n in sorted(n_rx.items()):
+                self.telemetry.counter(f"fabric_rx_flows/{cl}", now, n)
+            self.telemetry.counter("fabric_in_flight", now,
+                                   len(self._flows))
 
     def _maybe_finish(self, flow: _Flow, epoch: int) -> None:
         if flow.epoch != epoch or flow not in self._flows:

@@ -55,8 +55,13 @@ class MetricsCollector:
         ttfts = [r.ttft() for r in self.completed if r.ttft() is not None]
         tpots = [r.tpot() for r in self.completed if r.tpot() is not None]
         e2es = [r.e2e() for r in self.completed if r.e2e() is not None]
-        queues = [r.timestamps["first_scheduled"] - r.arrival
-                  for r in self.completed if "first_scheduled" in r.timestamps]
+        # every completed request contributes a queue delay: one that was
+        # never stamped ``first_scheduled`` (scheduled the instant it
+        # arrived, before any stamping seam ran) waited 0.0 — dropping it
+        # would bias the percentiles upward over exactly the fastest
+        # requests
+        queues = [r.timestamps.get("first_scheduled", r.arrival) - r.arrival
+                  for r in self.completed]
         out_tokens = sum(r.generated for r in self.completed)
         rep = {
             "n_completed": len(self.completed),

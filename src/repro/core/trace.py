@@ -22,18 +22,17 @@ class EventTrace:
         return [e for e in self.events if e[1] == kind.value]
 
     def to_chrome_trace(self, path: str) -> None:
-        """Duration events per replica (BATCH_DONE carries dur) + instants."""
-        out = []
-        for t, kind, data in self.events:
-            if kind == EV.BATCH_DONE.value and "dur" in data:
-                out.append({
-                    "name": f"batch p{data.get('n_prefill', 0)}"
-                            f"/d{data.get('n_decode', 0)}",
-                    "ph": "X", "pid": 0, "tid": data.get("replica", "?"),
-                    "ts": (t - data["dur"]) * 1e6, "dur": data["dur"] * 1e6,
-                })
-            else:
-                out.append({"name": kind, "ph": "i", "pid": 0, "tid": "events",
-                            "ts": t * 1e6, "s": "g"})
+        """Chrome trace-event export of the raw ring.
+
+        .. deprecated::
+            Thin shim over
+            :func:`repro.obs.sinks.engine_events_to_chrome` (which fixed
+            the negative-``ts`` clamp and honours ``dur`` on any event
+            kind, not just BATCH_DONE).  Prefer the span-level
+            observability layer: ``SimSpec(obs=ObsSpec())`` +
+            ``repro.obs.write_chrome_trace``.
+        """
+        from repro.obs.sinks import engine_events_to_chrome
         with open(path, "w") as f:
-            json.dump({"traceEvents": out}, f)
+            json.dump({"traceEvents": engine_events_to_chrome(self.events)},
+                      f)

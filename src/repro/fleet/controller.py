@@ -25,7 +25,8 @@ from repro.fleet.router import resolve_fleet_router
 
 class FleetController:
     def __init__(self, spec, engine: SimEngine, *,
-                 hardware=None, ops=None, engine_overhead=None):
+                 hardware=None, ops=None, engine_overhead=None,
+                 telemetry=None):
         from repro.fleet.autoscaler import Autoscaler
         self.spec = spec
         self.fleet = spec.fleet
@@ -33,6 +34,9 @@ class FleetController:
         self._hardware = hardware
         self._ops = ops
         self._engine_overhead = engine_overhead
+        # set before the initial instance builds below so every instance
+        # (initial and scaled-up alike) is wired through _build_instance
+        self.telemetry = telemetry
         self.rng = np.random.default_rng([spec.seed, 0xF1EE7])
         # windowed mode: every instance runs on its OWN sub-engine and the
         # fleet engine only carries control-plane events (arrivals, ticks,
@@ -105,6 +109,9 @@ class FleetController:
                 pool = cluster.active_replicas()
                 for w in pool[len(pool) - a.pd_spares:]:
                     w.active = False
+        if self.telemetry is not None:
+            from repro.obs import attach_telemetry
+            attach_telemetry(handle, self.telemetry, instance=name)
         inst = Instance(name, group, handle,
                         created_at=self.engine.now, state=state)
         if state != ACTIVE:
@@ -114,6 +121,7 @@ class FleetController:
             lambda r, w, inst=inst: self._on_complete(inst, r)
         self.instances[name] = inst
         inst.touch(self.engine.now)
+        self._tel_burn(self.engine.now)
         return inst
 
     def _apply_faults(self) -> None:
@@ -189,11 +197,28 @@ class FleetController:
         # an instance whose entry replicas are all down (fault injection)
         # rejects; spill to the remaining instances before giving up
         if self._accept(chosen, r, now):
+            self._tel_route(r, chosen, now)
             return
         for inst in candidates:
             if inst is not chosen and self._accept(inst, r, now):
+                self._tel_route(r, inst, now, spilled=True)
                 return
         raise RuntimeError("fleet: no instance has healthy entry replicas")
+
+    def _tel_route(self, r, inst: Instance, now: float,
+                   spilled: bool = False) -> None:
+        tel = self.telemetry
+        if tel is None:
+            return
+        meta = {"instance": inst.name}
+        if getattr(r, "tenant", None) is not None:
+            meta["tenant"] = r.tenant
+        if spilled:
+            meta["spilled"] = True
+        tel.span("fleet_route", r.rid, now, now, **meta)
+        tel.counter("outstanding", now, inst.outstanding(),
+                    instance=inst.name)
+        tel.counter("fleet_outstanding", now, self.outstanding_total)
 
     def _accept(self, inst: Instance, r, now: float) -> bool:
         if self.windowed and inst.engine is not self.engine \
@@ -248,6 +273,11 @@ class FleetController:
         # windowed mode, where the fleet engine waits at a barrier
         now = inst.engine.now
         self.outstanding_total -= 1
+        tel = self.telemetry
+        if tel is not None:
+            tel.counter("outstanding", now, inst.outstanding(),
+                        instance=inst.name)
+            tel.counter("fleet_outstanding", now, self.outstanding_total)
         inst.touch(now)
         if inst.state == DRAINING and inst.outstanding() == 0:
             inst.stop(now)
@@ -270,6 +300,19 @@ class FleetController:
                    **extra) -> None:
         self.scale_events.append(dict(
             t=t, kind=kind, instance=inst.name, **extra))
+        if self.telemetry is not None:
+            self._tel_burn(t)
+            self.telemetry.span(kind, -1, t, t, instance=inst.name)
+
+    def _tel_burn(self, t: float) -> None:
+        """Sample the fleet $/hr staircase — the rate steps exactly at
+        instance builds and lifecycle transitions, so sampling there
+        captures it completely."""
+        tel = self.telemetry
+        if tel is not None:
+            rate = sum(i.dollar_rate() for i in self.instances.values()
+                       if i.stopped_at is None)
+            tel.counter("fleet_dollars_per_hour", t, rate)
 
     def _replica_rate(self, inst: Instance, w) -> float:
         """Provisioned $/hr one replica represents (its cluster's per-

@@ -43,6 +43,7 @@ def instance_subspec(spec, group, seed: int):
         else spec.pipeline,
         memory=group.memory if group.memory is not None else spec.memory,
         slo=spec.slo,
+        obs=spec.obs,
         seed=seed,
         name=group.name)
 

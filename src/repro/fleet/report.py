@@ -108,13 +108,22 @@ def _routing_imbalance(instances: Dict[str, Instance]) -> Optional[float]:
 
 # ------------------------------------------------------------------ run --
 def run_fleet(spec, *, hardware=None, ops=None,
-              engine_overhead=None) -> FleetReport:
-    """Validate, build, and run one fleet experiment (see module doc)."""
+              engine_overhead=None, telemetry=None) -> FleetReport:
+    """Validate, build, and run one fleet experiment (see module doc).
+
+    ``telemetry`` injects a shared :class:`repro.obs.Telemetry` recorder
+    spanning every instance (windowed sub-engines keep absolute sim time,
+    so all spans merge on the global clock); ``None`` creates one iff
+    ``spec.obs`` is enabled."""
     t0 = time.perf_counter()
     spec.validate()
+    if telemetry is None and spec.obs is not None and spec.obs.enabled:
+        from repro.obs import Telemetry
+        telemetry = Telemetry.from_spec(spec.obs)
     engine = SimEngine()
     fc = FleetController(spec, engine, hardware=hardware, ops=ops,
-                         engine_overhead=engine_overhead)
+                         engine_overhead=engine_overhead,
+                         telemetry=telemetry)
     requests = spec.workload.build_requests(spec.seed)
     fc.submit_all(requests)
     until = spec.until if spec.until is not None else float("inf")
@@ -210,6 +219,8 @@ def run_fleet(spec, *, hardware=None, ops=None,
                if t["slo_attainment"] is not None]
     if attains:
         summary["tenant_slo_attainment_min"] = min(attains)
+    if telemetry is not None:
+        summary.update(telemetry.summary_fields())
     conservation = fc.conservation_check()
     return FleetReport(
         name=spec.name,

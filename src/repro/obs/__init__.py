@@ -1,0 +1,67 @@
+"""Observability: request spans, sim-time counters, trace export.
+
+Everything here is off-by-default.  A simulation run pays nothing unless
+a :class:`~repro.obs.telemetry.Telemetry` recorder is attached — every
+instrumentation site in the core guards on ``telemetry is not None``, so
+``obs: off`` runs are byte-identical to pre-observability builds.
+
+Enable declaratively::
+
+    spec = SimSpec(..., obs=ObsSpec())
+    rep, tel = run_traced(spec)
+    write_chrome_trace(tel, "out.trace.json")   # load in Perfetto
+    write_spans_jsonl(tel, "out.spans.jsonl")
+    print(render_summary(tel))
+
+or from the CLI: ``python -m repro trace spec.yaml --out artifacts/t``.
+"""
+from repro.obs.attribution import ATTRIBUTION_KEYS, attribution_for
+from repro.obs.counters import CounterBoard
+from repro.obs.sinks import (
+    SINKS,
+    SPANS_SCHEMA_VERSION,
+    TraceSink,
+    engine_events_to_chrome,
+    read_spans_jsonl,
+    render_summary,
+    write_chrome_trace,
+    write_spans_jsonl,
+    write_summary,
+)
+from repro.obs.spans import SPAN_CATEGORY, Span
+from repro.obs.telemetry import RequestRecord, Telemetry, attach_telemetry
+
+__all__ = [
+    "ATTRIBUTION_KEYS", "CounterBoard", "RequestRecord", "SINKS",
+    "SPANS_SCHEMA_VERSION", "SPAN_CATEGORY", "Span", "Telemetry",
+    "TraceSink", "attach_telemetry", "attribution_for",
+    "engine_events_to_chrome", "read_spans_jsonl", "render_summary",
+    "run_traced", "write_chrome_trace", "write_spans_jsonl",
+    "write_summary",
+]
+
+
+def run_traced(spec):
+    """Run ``spec`` with telemetry attached; return ``(report, tel)``.
+
+    Forces observability on (a default ``ObsSpec`` is injected when the
+    spec carries none; other obs options are preserved), so this is the
+    one-call entry point for trace studies and the ``repro trace`` CLI
+    verb.
+    """
+    from dataclasses import asdict
+
+    from repro.obs.telemetry import Telemetry
+
+    if spec.obs is None or not spec.obs.enabled:
+        obs = asdict(spec.obs) if spec.obs is not None else {}
+        obs["enabled"] = True
+        spec = spec.with_(obs=obs)
+    tel = Telemetry.from_spec(spec.obs)
+    if spec.fleet is not None:
+        from repro.fleet.report import run_fleet
+        rep = run_fleet(spec, telemetry=tel)
+    else:
+        from repro.api.run import run
+        rep = run(spec, telemetry=tel)
+    return rep, tel

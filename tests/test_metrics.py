@@ -24,6 +24,27 @@ def test_empty_collector_report_is_valid_json():
                    for v in rep.values())
 
 
+def test_queue_percentiles_count_zero_wait_requests():
+    """Regression: requests that were scheduled the instant they arrived
+    (no ``first_scheduled`` stamp) used to be silently DROPPED from the
+    queue-delay percentiles, biasing them upward over exactly the
+    fastest requests.  They must contribute 0.0 instead."""
+    from repro.core.request import Request
+    mc = MetricsCollector()
+    waits = {0: None, 1: 0.2, 2: 0.4, 3: None}   # None = never stamped
+    for rid, wait in waits.items():
+        r = Request(rid=rid, arrival=1.0, prompt_len=8, output_len=4)
+        if wait is not None:
+            r.timestamps["first_scheduled"] = r.arrival + wait
+        mc.on_complete(r, replica=None)
+    rep = mc.report()
+    # hand-computed over [0.0, 0.0, 0.2, 0.4] (zero-wait requests in)
+    assert abs(rep["queue_mean_s"] - 0.15) < 1e-12
+    assert abs(rep["queue_p50_s"] - 0.1) < 1e-12
+    assert abs(rep["queue_p99_s"] - (0.2 + 0.97 * 0.2)) < 1e-12
+    # the old behaviour dropped the two unstamped requests -> p50 0.3
+
+
 def test_zero_completed_run_produces_parseable_report():
     """A run cut off before any request completes (until ~ 0) must still
     serialize to strict JSON and round-trip through Report.from_dict."""
